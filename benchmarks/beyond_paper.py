@@ -1,0 +1,72 @@
+"""Beyond-paper scheduling extensions benchmark:
+
+1. per-client cut-layer co-optimization (the paper's stated future work),
+2. multi-batch pipelining vs the paper's batch-by-batch regime,
+3. local search with optimal inner scheduling vs the paper's two methods.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (schedule_pipelined, search_cuts, solve_admm,
+                        solve_balanced_greedy, solve_local_search)
+from repro.core.balanced_greedy import assign_balanced
+from repro.profiling.scenarios import cnn_instance, instance_builder_for
+from repro.profiling.testbed_models import TESTBED_MODELS
+
+
+def run_cut_search(models=("resnet101", "vgg19"), J=10, I=2, seeds=(0, 1)):
+    rows = []
+    for model in models:
+        tm = TESTBED_MODELS[model]
+        for seed in seeds:
+            builder = instance_builder_for(model, J, I, seed=seed)
+            fixed = builder([tm.default_cut] * J)
+            base = solve_balanced_greedy(fixed).makespan
+            res = search_cuts(builder, tm.num_layers, J,
+                              init_cut=tm.default_cut, rounds=2, stride=2)
+            rows.append({
+                "model": model, "seed": seed, "fixed_cut": base,
+                "searched": res.makespan,
+                "gain_pct": round(100.0 * (base - res.makespan) / base, 1),
+                "evals": res.evaluations,
+            })
+    return rows
+
+
+def run_pipelining(model="vgg19", J=12, I=3, Ks=(1, 2, 4, 8), seeds=(0, 1)):
+    rows = []
+    for K in Ks:
+        gains, mks = [], []
+        for seed in seeds:
+            inst = cnn_instance(model, J=J, I=I, scenario=2, seed=seed)
+            assign = assign_balanced(inst)
+            res = schedule_pipelined(inst, assign, K)
+            gains.append(res.gain_pct)
+            mks.append(res.makespan)
+        rows.append({"model": model, "K": K,
+                     "makespan": round(float(np.mean(mks)), 1),
+                     "gain_vs_sequential_pct": round(float(np.mean(gains)), 1)})
+    return rows
+
+
+def main():
+    print("-- per-client cut-layer co-optimization (paper future work) --")
+    rows1 = run_cut_search()
+    print(f"{'model':10s} seed  fixed  searched  gain%  evals")
+    for r in rows1:
+        print(f"{r['model']:10s} {r['seed']:4d} {r['fixed_cut']:6d} "
+              f"{r['searched']:9d} {r['gain_pct']:6.1f} {r['evals']:6d}")
+
+    print("\n-- multi-batch pipelining vs batch-by-batch --")
+    rows2 = run_pipelining()
+    print("  K  makespan  gain_vs_Kx_single%")
+    for r in rows2:
+        print(f"{r['K']:3d} {r['makespan']:9.1f} "
+              f"{r['gain_vs_sequential_pct']:19.1f}")
+    return rows1 + rows2
+
+
+if __name__ == "__main__":
+    main()

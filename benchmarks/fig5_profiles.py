@@ -1,0 +1,48 @@
+"""Fig. 5 reproduction: profiled part-1 computing time per device, plus a
+calibration check that per-device batch times reproduce Table I."""
+
+from __future__ import annotations
+
+from repro.profiling.devices import DEVICES
+from repro.profiling.scenarios import _bwd_frac, _cnn_part_times, _device_time
+from repro.profiling.testbed_models import TESTBED_MODELS
+
+
+def run():
+    rows = []
+    for model, tm in TESTBED_MODELS.items():
+        cut = tm.default_cut
+        bwd = _bwd_frac(model)
+        for dev_key in ("rpi4", "rpi3", "jetson_cpu", "jetson_gpu", "vm8", "m1"):
+            dev = DEVICES[dev_key]
+            total = _device_time(dev, model)
+            fw = _cnn_part_times(tm, total, cut, bwd)
+            rows.append({
+                "model": model, "device": dev_key,
+                "batch_time_s": round(total, 2),
+                "table1_s": (dev.table1 or {}).get(model),
+                "part1_fwd_ms": round(fw[0] * 1000, 1),
+                "part2_fwd_ms": round(fw[1] * 1000, 1),
+                "part3_fwd_ms": round(fw[2] * 1000, 1),
+                "bwd_over_fwd": bwd,
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'model':10s} {'device':11s} batch_s  table1  p1_fwd_ms p2_fwd_ms p3_fwd_ms")
+    for r in rows:
+        t1 = f"{r['table1_s']:.1f}" if r["table1_s"] else "   -"
+        print(f"{r['model']:10s} {r['device']:11s} {r['batch_time_s']:7.2f} "
+              f"{t1:>7s} {r['part1_fwd_ms']:9.1f} {r['part2_fwd_ms']:9.1f} "
+              f"{r['part3_fwd_ms']:9.1f}")
+    # calibration: devices WITH measurements must match Table I exactly
+    for r in rows:
+        if r["table1_s"]:
+            assert abs(r["batch_time_s"] - r["table1_s"]) < 0.05, r
+    return rows
+
+
+if __name__ == "__main__":
+    main()

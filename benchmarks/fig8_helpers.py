@@ -1,0 +1,40 @@
+"""Fig. 8 reproduction: batch makespan vs number of helpers (J=100 clients,
+Scenario 1, balanced-greedy — Observation 4)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import solve_balanced_greedy
+from repro.profiling.scenarios import cnn_instance
+
+HELPERS = [1, 2, 3, 5, 10, 15, 20]
+
+
+def run(model: str = "resnet101", J: int = 100, seeds=(0, 1, 2)):
+    rows = []
+    prev = None
+    for I in HELPERS:
+        mks = []
+        for seed in seeds:
+            inst = cnn_instance(model, J=J, I=I, scenario=1, seed=seed)
+            mks.append(solve_balanced_greedy(inst).makespan)
+        mk = float(np.mean(mks))
+        gain = (100.0 * (prev - mk) / prev) if prev else 0.0
+        rows.append({"model": model, "J": J, "I": I,
+                     "makespan": round(mk, 1),
+                     "gain_vs_prev_pct": round(gain, 1)})
+        prev = mk
+    return rows
+
+
+def main():
+    rows = run()
+    print("  I  makespan  gain_vs_prev%")
+    for r in rows:
+        print(f"{r['I']:3d} {r['makespan']:9.1f} {r['gain_vs_prev_pct']:13.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

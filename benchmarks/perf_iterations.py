@@ -1,0 +1,146 @@
+"""§Perf hillclimb driver: run a (arch, shape, mesh) pair under a named set
+of optimization variants, re-lower + re-analyze, and log
+hypothesis -> change -> before -> after into experiments/perf/.
+
+Must be launched as its own process (needs 512 host devices):
+  PYTHONPATH=src python -m benchmarks.perf_iterations --pair deepseek_train
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, sharding_rules
+from repro.launch.roofline import analyze, memory_summary
+from repro.launch.steps import lower_step
+from repro.profiling.cost_model import model_flops_6nd
+
+
+def _rules_no_moe_fsdp(multi_pod):
+    r = sharding_rules(multi_pod)
+    r["moe_embed"] = None  # experts sharded over model only: no per-layer gather
+    return r
+
+
+PAIRS = {
+    # (arch, shape, list of (variant_name, hypothesis, kwargs for lower_step))
+    "deepseek_train": ("deepseek-v3-671b", "train_4k", [
+        ("baseline", "paper-faithful FSDP-everything baseline", {}),
+        ("no_moe_fsdp",
+         "expert weights are re-gathered over the data axis every layer "
+         "(58 x ~1.4 GB all-gather); storing them model-sharded only should "
+         "cut the collective term by the expert-gather share at +1.3 GB/dev "
+         "memory", {"rules": "no_moe_fsdp"}),
+        ("no_moe_fsdp_cap1",
+         "capacity factor 1.25 pads every a2a bucket by 25%; dropping to "
+         "1.0 shrinks a2a traffic ~20% at slightly higher drop rate",
+         {"rules": "no_moe_fsdp", "capacity": 1.0}),
+        ("no_moe_fsdp_mb4",
+         "temp memory is activation-dominated; 4 microbatches should cut "
+         "activation temp ~4x at unchanged FLOPs (collective per-step "
+         "unchanged, repeated 4x smaller)",
+         {"rules": "no_moe_fsdp", "microbatches": 4}),
+    ]),
+    "nemotron_train": ("nemotron-4-340b", "train_4k", [
+        ("baseline", "paper-faithful baseline", {}),
+        ("mb4",
+         "340B dense: weights+opt args ~13 GB/dev leave no activation room; "
+         "4 microbatches cut activation temp ~4x, FLOPs unchanged",
+         {"microbatches": 4}),
+        ("mb8", "8 microbatches: further temp cut, diminishing returns "
+         "once weight gathers dominate", {"microbatches": 8}),
+    ]),
+    "gemma3_long": ("gemma3-27b", "long_500k", [
+        ("baseline",
+         "default long-context variant: ALL layers windowed (W=1024); "
+         "memory term should be tiny but quality-lossy for globals", {}),
+        ("global_full_cache",
+         "keep the 10-11 global layers' caches FULL (524k, seq-sharded over "
+         "data): memory term rises by ~2.7 GB/dev of cache reads per step "
+         "but restores exact global attention",
+         {"rt": {"long_context": False}}),
+    ]),
+    "gemma2_train": ("gemma2-2b", "train_4k", [
+        ("baseline", "paper-faithful baseline", {}),
+        ("mb4", "activation temp (44 GB) is ~6x the 7.9 GB f32 carry stack; "
+         "4 microbatches cut it ~4x", {"microbatches": 4}),
+        ("no_remat", "remat trades 1.33x flops for memory; without it the "
+         "compute term drops but temp explodes (refutation check)",
+         {"rt": {"remat": False}}),
+        ("seqpar",
+         "gemma2's 8 q-heads cannot shard over model=16, so attention "
+         "compute is REPLICATED per device (~16x waste on the score/AV "
+         "matmuls); sequence-parallel attention (queries sharded along seq "
+         "over the model axis, K/V gathered) should cut the compute term "
+         "several-fold for +0.5 GB/layer of K/V all-gather traffic",
+         {"rt": {"seq_parallel_attn": True}}),
+        ("seqpar_mb4", "combine both confirmed wins",
+         {"rt": {"seq_parallel_attn": True}, "microbatches": 4}),
+    ]),
+}
+
+
+def run_pair(name: str, multi_pod: bool = False):
+    arch, shape_name, variants = PAIRS[name]
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    results = []
+    for vname, hypothesis, kw in variants:
+        kwargs = {}
+        if kw.get("rules") == "no_moe_fsdp":
+            kwargs["rules"] = _rules_no_moe_fsdp(multi_pod)
+        if "microbatches" in kw:
+            kwargs["microbatches"] = kw["microbatches"]
+        if "rt" in kw:
+            kwargs["rt_overrides"] = kw["rt"]
+        cfg_v = cfg
+        if "capacity" in kw:
+            import dataclasses
+            cfg_v = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe,
+                                             capacity_factor=kw["capacity"]))
+        lowered, meta = lower_step(cfg_v, mesh, shape, **kwargs)
+        compiled = lowered.compile()
+        if shape.kind == "train":
+            mf = model_flops_6nd(cfg, shape.global_batch, shape.seq_len) / mesh.size
+        else:
+            mf = 2.0 * cfg.active_param_count() * shape.global_batch / mesh.size
+        roof = analyze(compiled, model_flops_per_device=mf)
+        mem = memory_summary(compiled)
+        row = {
+            "variant": vname, "hypothesis": hypothesis,
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "flops": roof.flops, "bytes": roof.bytes_accessed,
+            "coll_bytes": roof.coll_bytes,
+            "args_gb": mem.get("argument_size_in_bytes", 0) / 1e9,
+            "temp_gb": mem.get("temp_size_in_bytes", 0) / 1e9,
+            "useful_ratio": roof.useful_ratio,
+        }
+        results.append(row)
+        print(f"[perf:{name}] {vname}: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"temp={row['temp_gb']:.1f}GB dominant={roof.dominant}")
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(f"experiments/perf/{name}.json", "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=sorted(PAIRS), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    run_pair(args.pair, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

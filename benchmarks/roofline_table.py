@@ -1,0 +1,88 @@
+"""Aggregate the dry-run JSON results (experiments/dryrun/*.json) into the
+EXPERIMENTS.md roofline table.
+
+Memory term bounds: the graph analyzer's bytes are an UPPER bound (fusion
+granularity, loop bodies multiplied); XLA's cost_analysis bytes are a LOWER
+bound (while bodies counted once). Both are reported.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+V5E_HBM_GB = 16.0
+HBM_BW = 819e9
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(dirpath: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        if path.endswith(".FAILED.json"):
+            rows.append({"tag": os.path.basename(path), "failed": True})
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        roof = r["roofline"]
+        mem = r["memory"]
+        args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+        temp_gb = mem.get("temp_size_in_bytes", 0) / 1e9
+        xla_bytes = roof.get("xla_bytes") or 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "kind": r["kind"], "compile_s": r["compile_s"],
+            "args_gb": round(args_gb, 2), "temp_gb": round(temp_gb, 2),
+            "fits_16gb_args": args_gb <= V5E_HBM_GB,
+            "compute_ms": roof["compute_s"] * 1e3,
+            "memory_ms_hi": roof["memory_s"] * 1e3,
+            "memory_ms_lo": xla_bytes / HBM_BW * 1e3,
+            "collective_ms": roof["collective_s"] * 1e3,
+            "dominant": roof["dominant"],
+            "useful_ratio": roof.get("useful_ratio"),
+            "flops": roof["flops"],
+            "failed": False,
+        })
+    rows.sort(key=lambda r: (r.get("arch", ""),
+                             SHAPE_ORDER.get(r.get("shape", ""), 9),
+                             r.get("mesh", "")))
+    return rows
+
+
+def main(markdown_out: str | None = None):
+    rows = load()
+    ok = [r for r in rows if not r.get("failed")]
+    hdr = (f"{'arch':25s} {'shape':12s} {'mesh':8s} {'comp_ms':>9s} "
+           f"{'mem_lo':>8s} {'mem_hi':>9s} {'coll_ms':>8s} {'dom':>6s} "
+           f"{'useful':>7s} {'args GB':>8s} {'temp GB':>8s}")
+    print(hdr)
+    lines_md = ["| arch | shape | mesh | compute ms | mem ms (lo-hi) | "
+                "coll ms | dominant | useful | args GB | temp GB |",
+                "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in ok:
+        u = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "-"
+        print(f"{r['arch']:25s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{r['compute_ms']:9.1f} {r['memory_ms_lo']:8.1f} "
+              f"{r['memory_ms_hi']:9.1f} {r['collective_ms']:8.1f} "
+              f"{r['dominant'][:6]:>6s} {u:>7s} {r['args_gb']:8.1f} "
+              f"{r['temp_gb']:8.1f}")
+        lines_md.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_ms']:.1f} | {r['memory_ms_lo']:.1f}-"
+            f"{r['memory_ms_hi']:.0f} | {r['collective_ms']:.1f} | "
+            f"{r['dominant']} | {u} | {r['args_gb']:.1f} | "
+            f"{r['temp_gb']:.1f} |")
+    failed = [r for r in rows if r.get("failed")]
+    for r in failed:
+        print("FAILED:", r["tag"])
+    if markdown_out:
+        with open(markdown_out, "w") as f:
+            f.write("\n".join(lines_md) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(markdown_out=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,88 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+``python -m benchmarks.run [--fast]`` prints a ``name,us_per_call,derived``
+CSV line per benchmark plus each benchmark's own table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _timed(name, fn, derived_fn):
+    t0 = time.perf_counter()
+    rows = fn()
+    dt = (time.perf_counter() - t0) * 1e6
+    derived = derived_fn(rows)
+    print(f"\nCSV,{name},{dt:.0f},{derived}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller grids (CI-sized)")
+    ap.add_argument("--skip-exact", action="store_true",
+                    help="skip the exact-MILP Table II benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import (fig5_profiles, fig6_slotlen, fig7_methods,
+                            fig8_helpers, table2_admm)
+
+    print("=" * 72)
+    print("Fig. 5 — per-device part profiles (Table I calibration)")
+    print("=" * 72)
+    _timed("fig5_profiles", fig5_profiles.main,
+           lambda rows: f"devices={len(rows)}")
+
+    if not args.skip_exact:
+        print("\n" + "=" * 72)
+        print("Table II — ADMM vs exact ILP (HiGHS): suboptimality & speedup")
+        print("=" * 72)
+        _timed("table2_admm", table2_admm.main,
+               lambda rows: "max_subopt_pct=" + str(max(
+                   (r["suboptimality_pct"] for r in rows
+                    if r["suboptimality_pct"] == r["suboptimality_pct"]),
+                   default="nan")))
+
+    print("\n" + "=" * 72)
+    print("Fig. 6 — slot length vs makespan / solve time")
+    print("=" * 72)
+    _timed("fig6_slotlen", fig6_slotlen.main,
+           lambda rows: f"mk_increase_200ms={rows[-1]['makespan_increase_pct']}%")
+
+    print("\n" + "=" * 72)
+    print("Fig. 7 — methods vs baseline across scenario sizes")
+    print("=" * 72)
+    _timed("fig7_methods", lambda: fig7_methods.main(fast=args.fast),
+           lambda rows: "max_gain_pct=" + str(
+               max(r["strategy_gain_pct"] for r in rows)))
+
+    print("\n" + "=" * 72)
+    print("Fig. 8 — makespan vs number of helpers (J=100)")
+    print("=" * 72)
+    _timed("fig8_helpers", fig8_helpers.main,
+           lambda rows: "gain_1_to_2_helpers_pct=" + str(
+               rows[1]["gain_vs_prev_pct"]))
+
+    print("\n" + "=" * 72)
+    print("Beyond-paper: cut-layer co-optimization + batch pipelining")
+    print("=" * 72)
+    from benchmarks import beyond_paper
+    _timed("beyond_paper", beyond_paper.main,
+           lambda rows: "cut_gain_pct=" + str(
+               max(r.get("gain_pct", 0) for r in rows)))
+
+    import os
+    if os.path.isdir("experiments/dryrun"):
+        from benchmarks import roofline_table
+        print("\n" + "=" * 72)
+        print("Roofline terms from the multi-pod dry-run")
+        print("=" * 72)
+        _timed("roofline_table", roofline_table.main,
+               lambda rows: f"pairs={sum(1 for r in rows if not r.get('failed'))}")
+
+
+if __name__ == "__main__":
+    main()

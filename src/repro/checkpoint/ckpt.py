@@ -1,0 +1,58 @@
+"""Checkpointing: flat-key npz with step metadata. No external deps."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    flat = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            flat.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            flat.update(_flatten(v, f"{prefix}{i}/"))
+        flat[f"{prefix}__seq__"] = np.array(
+            [len(tree), 1 if isinstance(tree, tuple) else 0])
+    else:
+        flat[prefix.rstrip("/")] = np.asarray(tree)
+    return flat
+
+
+def save(path: str, params, *, step: int = 0, extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(params))
+    np.savez(path, __meta__=json.dumps({"step": step, **(extra or {})}), **flat)
+
+
+def load(path: str) -> Tuple[Any, dict]:
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+
+    def build(prefix: str):
+        seq_key = f"{prefix}__seq__"
+        if seq_key in flat:
+            n, is_tuple = flat[seq_key]
+            items = [build(f"{prefix}{i}/") for i in range(int(n))]
+            return tuple(items) if is_tuple else items
+        children = {}
+        for k in flat:
+            if k.startswith(prefix):
+                rest = k[len(prefix):]
+                head = rest.split("/")[0]
+                if head and head != "__seq__":
+                    children[head] = None
+        if not children:
+            return flat[prefix.rstrip("/")]
+        return {c: build(f"{prefix}{c}/")
+                if any(k.startswith(f"{prefix}{c}/") for k in flat)
+                else flat[f"{prefix}{c}"] for c in children}
+
+    return build(""), meta

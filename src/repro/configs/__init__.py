@@ -1,0 +1,46 @@
+"""Config registry: ``--arch <id>`` resolution + the paper's own SL models."""
+
+from .base import INPUT_SHAPES, InputShape, MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from .nemotron_4_340b import CONFIG as _nemotron
+from .paligemma_3b import CONFIG as _paligemma
+from .deepseek_v3_671b import CONFIG as _deepseek
+from .phi3_medium_14b import CONFIG as _phi3
+from .gemma2_2b import CONFIG as _gemma2
+from .zamba2_2_7b import CONFIG as _zamba2
+from .mamba2_130m import CONFIG as _mamba2
+from .hubert_xlarge import CONFIG as _hubert
+from .gemma3_27b import CONFIG as _gemma3
+from .granite_moe_1b_a400m import CONFIG as _granite
+
+ARCHS = {
+    c.arch_id: c
+    for c in [_nemotron, _paligemma, _deepseek, _phi3, _gemma2,
+              _zamba2, _mamba2, _hubert, _gemma3, _granite]
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id.endswith("-smoke"):
+        return ARCHS[arch_id[: -len("-smoke")]].reduced()
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> bool:
+    """Which (arch x input shape) pairs run — skips documented in DESIGN.md."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode":
+        if not cfg.causal:  # encoder-only (hubert): no autoregressive decode
+            return False
+        if shape.seq_len > 100_000:
+            # long_500k needs sub-quadratic attention: SSM/hybrid families or
+            # dense archs with a sliding-window variant
+            kinds = set(cfg.layer_kinds)
+            has_subquadratic = ("mamba" in kinds) or ("local" in kinds)
+            return has_subquadratic
+    return True
+
+
+__all__ = ["ARCHS", "get_config", "shape_supported", "INPUT_SHAPES",
+           "InputShape", "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig"]

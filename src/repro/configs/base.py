@@ -1,0 +1,176 @@
+"""Model configuration system.
+
+Every assigned architecture is described by a ``ModelConfig``. The layer
+stack is a repeating ``block_pattern`` of block kinds:
+
+  "attn"        full-attention transformer block
+  "local"       sliding-window attention block
+  "mla"         multi-head latent attention block (DeepSeek)
+  "mamba"       Mamba2 / SSD block
+  "shared_attn" attention block with weights SHARED across occurrences
+                (Zamba2-style)
+
+plus per-block MLP kind ("swiglu" | "geglu" | "gelu" | "relu2" | "moe").
+``block_pattern`` is tiled to ``num_layers``; a leading ``first_k_dense``
+overrides the MLP of the first k blocks to be dense (DeepSeek-V3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    experts_per_token: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 128
+    conv_kernel: int = 4
+    expand: int = 2
+    ssm_head_dim: int = 64
+    chunk_size: int = 64  # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_ssm_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.ssm_head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    source: str  # citation
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    block_pattern: Tuple[str, ...] = ("attn",)
+    mlp_kind: str = "swiglu"  # default MLP for every block
+    first_k_dense: int = 0  # DeepSeek: first k blocks use dense MLP w/ d_ff
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    sliding_window: int = 4096
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    use_qk_norm: bool = False
+    use_post_norm: bool = False  # gemma2/3 style post-block norms
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    causal: bool = True  # False for encoder-only (hubert)
+    tie_embeddings: bool = True
+    mtp_depth: int = 0  # DeepSeek multi-token prediction heads
+    # modality frontends are STUBS: input_specs() provides embeddings directly
+    frontend: Optional[str] = None  # None | "vision" | "audio"
+    frontend_tokens: int = 0  # prefix length contributed by the stub frontend
+    dtype: str = "bfloat16"
+    # --- split-learning defaults (cut layers sigma1, sigma2; Sec. I) -------
+    sl_cut: Tuple[int, int] = (1, -1)  # -1 => L-1 (last layer on client)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        reps = -(-self.num_layers // len(self.block_pattern))
+        return (self.block_pattern * reps)[: self.num_layers]
+
+    def mlp_kind_for_layer(self, idx: int) -> str:
+        if idx < self.first_k_dense:
+            return "swiglu" if self.mlp_kind == "moe" else self.mlp_kind
+        return self.mlp_kind
+
+    @property
+    def sl_cuts_resolved(self) -> Tuple[int, int]:
+        s1, s2 = self.sl_cut
+        if s2 < 0:
+            s2 = self.num_layers + s2
+        return s1, s2
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used by cost model & docs)."""
+        from repro.profiling.cost_model import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.profiling.cost_model import count_params
+        return count_params(self, active_only=True)
+
+    def reduced(self, *, num_layers: int = 2, d_model: int = 256,
+                vocab: int = 512) -> "ModelConfig":
+        """Smoke-test variant: same family/pattern, tiny dims (spec: <=2
+        layers, d_model<=512, <=4 experts)."""
+        heads = max(2, min(4, self.num_heads))
+        kv = max(1, min(heads, self.num_kv_heads if self.num_kv_heads else heads))
+        if heads % kv:
+            kv = 1
+        kw = dict(
+            arch_id=self.arch_id + "-smoke",
+            num_layers=num_layers,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=max(8, d_model // heads),
+            d_ff=d_model * 4,
+            vocab_size=vocab,
+            sliding_window=64,
+            frontend_tokens=min(self.frontend_tokens, 8) if self.frontend else 0,
+            # part-1 = first layer, part-2 = the rest, part-3 = head (part-2
+            # must be non-empty — it is the offloaded task)
+            sl_cut=(1, num_layers) if num_layers > 1 else (0, num_layers),
+        )
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(
+                num_experts=4, experts_per_token=2,
+                expert_d_ff=d_model * 2,
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                capacity_factor=2.0,
+            )
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                  qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                  v_head_dim=16)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(state_size=16, conv_kernel=4, expand=2,
+                                  ssm_head_dim=32, chunk_size=16)
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

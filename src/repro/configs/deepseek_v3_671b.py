@@ -1,0 +1,27 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437]: MLA, 1 shared + 256 routed top-8 MoE,
+first 3 layers dense, multi-token prediction (MTP) depth 1."""
+
+from .base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    source="arXiv:2412.19437",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,   # MLA: all heads share the compressed latent KV
+    d_ff=18432,         # dense-layer FFN width (first_k_dense layers)
+    vocab_size=129280,
+    block_pattern=("mla",),
+    mlp_kind="moe",
+    first_k_dense=3,
+    moe=MoEConfig(num_experts=256, experts_per_token=8, expert_d_ff=2048,
+                  num_shared_experts=1, router_aux_coef=0.001),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    mtp_depth=1,
+    sl_cut=(2, 59),
+)

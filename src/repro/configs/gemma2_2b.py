@@ -1,0 +1,26 @@
+"""Gemma-2-2B [arXiv:2408.00118]: local+global alternating attention,
+attention & final-logit softcapping, pre+post block norms, GeGLU."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma2-2b",
+    family="dense",
+    source="arXiv:2408.00118",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    block_pattern=("local", "attn"),
+    mlp_kind="geglu",
+    sliding_window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    use_post_norm=True,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    sl_cut=(2, 24),
+)

@@ -1,0 +1,25 @@
+"""Gemma-3-27B [hf:google/gemma-3-1b-pt family]: 5 local : 1 global attention,
+sliding window 1024, QK-norm, 128k context."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma3-27b",
+    family="dense",
+    source="hf:google/gemma-3-1b-pt",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    block_pattern=("local",) * 5 + ("attn",),
+    mlp_kind="geglu",
+    sliding_window=1024,
+    use_qk_norm=True,
+    use_post_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    sl_cut=(2, 60),
+)

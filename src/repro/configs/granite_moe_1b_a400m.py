@@ -1,0 +1,24 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base]:
+MoE with 32 experts, top-8 routing, GQA kv=8."""
+
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-moe-1b-a400m",
+    family="moe",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,  # expert FFN width
+    vocab_size=49155,
+    block_pattern=("attn",),
+    mlp_kind="moe",
+    moe=MoEConfig(num_experts=32, experts_per_token=8, expert_d_ff=512,
+                  num_shared_experts=0),
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    sl_cut=(2, 22),
+)

@@ -1,0 +1,29 @@
+"""HuBERT-XLarge [arXiv:2106.07447]: encoder-only transformer (w2v2 arch).
+
+The mel-spectrogram + conv feature extractor frontend is a STUB per the task
+spec: ``input_specs()`` provides precomputed frame embeddings (20ms frames).
+Encoder-only: no autoregressive decode — decode shapes are skipped (DESIGN.md).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hubert-xlarge",
+    family="audio",
+    source="arXiv:2106.07447",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,  # masked-unit prediction codebook
+    block_pattern=("attn",),
+    mlp_kind="gelu",
+    norm="layernorm",
+    causal=False,
+    frontend="audio",
+    frontend_tokens=0,  # every position comes from the stub frontend
+    tie_embeddings=False,
+    sl_cut=(2, 46),
+)

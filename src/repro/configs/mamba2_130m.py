@@ -1,0 +1,21 @@
+"""Mamba2-130M [arXiv:2405.21060]: attention-free SSD (state-space duality)."""
+
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-130m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,       # attention-free
+    num_kv_heads=0,
+    head_dim=64,
+    d_ff=0,            # Mamba2 blocks have no separate MLP
+    vocab_size=50280,
+    block_pattern=("mamba",),
+    mlp_kind="gelu",   # unused (d_ff=0)
+    ssm=SSMConfig(state_size=128, conv_kernel=4, expand=2, ssm_head_dim=64),
+    tie_embeddings=True,
+    sl_cut=(2, 22),
+)

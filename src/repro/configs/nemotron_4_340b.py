@@ -1,0 +1,21 @@
+"""Nemotron-4-340B [arXiv:2402.16819 / 2406.11704]: dense GQA, squared-ReLU MLP."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="nemotron-4-340b",
+    family="dense",
+    source="arXiv:2402.16819",
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    block_pattern=("attn",),
+    mlp_kind="relu2",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    sl_cut=(2, 94),
+)

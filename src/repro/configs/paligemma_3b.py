@@ -1,0 +1,27 @@
+"""PaliGemma-3B [arXiv:2407.07726]: SigLIP vision stub + Gemma decoder (MQA).
+
+The SigLIP-400M vision tower + projector is a STUB per the task spec:
+``input_specs()`` provides 256 precomputed patch embeddings of width d_model.
+The language decoder below is fully implemented.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="paligemma-3b",
+    family="vlm",
+    source="arXiv:2407.07726",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    block_pattern=("attn",),
+    mlp_kind="geglu",
+    rope_theta=10000.0,
+    frontend="vision",
+    frontend_tokens=256,
+    sl_cut=(1, 17),
+)

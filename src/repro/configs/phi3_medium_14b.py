@@ -1,0 +1,21 @@
+"""Phi-3-medium-14B [arXiv:2404.14219]: dense, RoPE, SwiGLU, GQA kv=10."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi3-medium-14b",
+    family="dense",
+    source="arXiv:2404.14219",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=10,
+    head_dim=128,
+    d_ff=17920,
+    vocab_size=100352,
+    block_pattern=("attn",),
+    mlp_kind="swiglu",
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    sl_cut=(2, 38),
+)

@@ -1,0 +1,24 @@
+"""Zamba2-2.7B [arXiv:2411.15242]: Mamba2 backbone with a SHARED
+attention+MLP block interleaved every 6th position (weights reused)."""
+
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab_size=32000,
+    block_pattern=("mamba",) * 5 + ("shared_attn",),
+    mlp_kind="gelu",
+    ssm=SSMConfig(state_size=64, conv_kernel=4, expand=2, ssm_head_dim=64),
+    sliding_window=4096,  # used only for the long_500k adaptation (DESIGN.md)
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    sl_cut=(2, 52),
+)

@@ -1,0 +1,40 @@
+"""Core library: joint client-helper assignment + scheduling for parallel SL.
+
+Implements the INFOCOM'24 paper "Workflow Optimization for Parallel Split
+Learning" — Problem 1 (exact MILP), the ADMM decomposition (Algorithm 1),
+the optimal bwd-prop scheduler (Algorithm 2 / Theorem 2), the
+balanced-greedy heuristic, the random+FCFS baseline, the preemption-cost
+extension, and the scenario-adaptive solution strategy.
+"""
+
+from .instance import Instance, random_instance
+from .schedule import (Schedule, check_feasible, InfeasibleScheduleError,
+                       lower_bound, queuing_delay)
+from .baker import Job, solve_min_max_cost, fcfs_nonpreemptive, max_cost
+from .bwd_schedule import (schedule_bwd, schedule_fwd_given_assignment,
+                           full_schedule_for_assignment)
+from .admm import solve_admm, AdmmResult
+from .balanced_greedy import solve_balanced_greedy, assign_balanced, \
+    schedule_fcfs, GreedyResult
+from .baseline import solve_baseline, assign_random, BaselineResult
+from .local_search import solve_local_search, LocalSearchResult
+from .strategy import solve_strategy, StrategyResult, heterogeneity_score
+from .milp import solve_exact, MilpResult
+from .cut_search import search_cuts, candidate_cuts, CutSearchResult
+from .pipeline import schedule_pipelined, PipelineResult
+
+__all__ = [
+    "Instance", "random_instance", "Schedule", "check_feasible",
+    "InfeasibleScheduleError", "lower_bound", "queuing_delay",
+    "Job", "solve_min_max_cost", "fcfs_nonpreemptive", "max_cost",
+    "schedule_bwd", "schedule_fwd_given_assignment",
+    "full_schedule_for_assignment",
+    "solve_admm", "AdmmResult",
+    "solve_balanced_greedy", "assign_balanced", "schedule_fcfs", "GreedyResult",
+    "solve_baseline", "assign_random", "BaselineResult",
+    "solve_local_search", "LocalSearchResult",
+    "solve_strategy", "StrategyResult", "heterogeneity_score",
+    "solve_exact", "MilpResult",
+    "search_cuts", "candidate_cuts", "CutSearchResult",
+    "schedule_pipelined", "PipelineResult",
+]

@@ -1,0 +1,164 @@
+"""Algorithm 1 — ADMM-based fwd-prop workflow optimization (Sec. V-A).
+
+The augmented Lagrangian (16) relaxes the coupling constraints (6) with an
+l1 penalty. Each iteration:
+
+  line 2  w-step: schedule (x, phi^f, c^f) given (y, lambda)
+  line 3  y-step: assignment given the new schedule
+  line 4  dual update on the violation of (6)
+  line 5  convergence flags (17), (18)
+  line 6  feasibility correction (19)
+
+Two w-step solvers are provided:
+  * ``mode="milp"``  — exact ILP via HiGHS (the paper's configuration;
+    footnote 7's "exact methods").
+  * ``mode="fast"``  — inexact: a load/penalty-aware helper choice followed by
+    an optimal per-helper preemptive schedule (Baker). Footnote 7 explicitly
+    allows inexact subproblem solutions; this is what scales.
+
+The y-step is a small generalized-assignment MILP (exact in both modes).
+After convergence, the bwd-prop schedule is completed with Algorithm 2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from . import baker, milp
+from .bwd_schedule import full_schedule_for_assignment, schedule_bwd, \
+    schedule_fwd_given_assignment
+from .instance import Instance
+from .schedule import Schedule, check_feasible
+
+
+@dataclasses.dataclass
+class AdmmResult:
+    schedule: Schedule
+    makespan: int
+    fwd_makespan: int
+    iterations: int
+    converged: bool
+    runtime_s: float
+    history: List[dict]
+
+
+def _x_totals(inst: Instance, sched: Schedule) -> np.ndarray:
+    X = np.zeros((inst.I, inst.J))
+    for j in range(inst.J):
+        X[int(sched.assign[j]), j] = len(sched.x_slots[j])
+    return X
+
+
+def _fast_w_step(inst: Instance, y: np.ndarray, lam: np.ndarray, rho: float,
+                 horizon: int) -> Schedule:
+    """Inexact w-step: penalty-aware helper choice + optimal Baker schedules.
+
+    Under constraint (20) each client is fully processed on one helper h;
+    choosing h != argmax(y[:, j]) incurs the l1 penalty rho/2 (p_hj + p_yj)
+    plus the lagrangian term lam_hj p_hj (see milp.solve_y_subproblem docs
+    for the symmetric y-step derivation).
+    """
+    load = np.zeros(inst.I)
+    choice = np.full(inst.J, -1, dtype=np.int64)
+    # clients with larger tasks choose first (LPT-style)
+    order = sorted(range(inst.J),
+                   key=lambda j: -float(np.mean([inst.p[i, j] for i in range(inst.I)
+                                                 if inst.is_edge(i, j)])))
+    for j in order:
+        y_j = int(np.argmax(y[:, j])) if y[:, j].max() > 0 else -1
+        best, best_score = None, np.inf
+        for h in range(inst.I):
+            if not inst.is_edge(h, j):
+                continue
+            pen = float(lam[h, j]) * float(inst.p[h, j])
+            if y_j >= 0 and h != y_j:
+                pen += (rho / 2.0) * (float(inst.p[h, j]) + float(inst.p[y_j, j]))
+            elif y_j < 0:
+                pen += (rho / 2.0) * float(inst.p[h, j])
+            est = max(float(inst.r[h, j]), load[h]) + float(inst.p[h, j]) \
+                + float(inst.l[h, j])
+            score = est + pen
+            if score < best_score:
+                best, best_score = h, score
+        choice[j] = best
+        load[best] += float(inst.p[best, j])
+    return schedule_fwd_given_assignment(inst, choice, horizon=horizon)
+
+
+def solve_admm(
+    inst: Instance,
+    *,
+    rho: float = 1.0,
+    tau_max: int = 10,
+    eps1: float = 0.5,
+    eps2: float = 0.5,
+    mode: str = "fast",
+    w_time_limit: Optional[float] = 20.0,
+    track_best: bool = True,
+    horizon: Optional[int] = None,
+    verbose: bool = False,
+) -> AdmmResult:
+    """Run Algorithm 1 + Algorithm 2 and return a full feasible schedule."""
+    t0 = time.perf_counter()
+    T = int(horizon if horizon is not None else inst.T)
+    Tf = inst.T_f
+    lam = np.zeros((inst.I, inst.J))
+    y = np.zeros((inst.I, inst.J), dtype=np.int64)  # y^(0) = 0 (Alg. 1 input)
+    prev_cf = None
+    history: List[dict] = []
+    best_sched, best_mk = None, np.inf
+    converged = False
+    it = 0
+
+    for it in range(1, tau_max + 1):
+        # ---- line 2: w-step -------------------------------------------
+        if mode == "milp":
+            w_sched, _ = milp.solve_w_subproblem(
+                inst, y, lam, rho, time_limit=w_time_limit, horizon=Tf)
+        else:
+            w_sched = _fast_w_step(inst, y, lam, rho, Tf)
+        X = _x_totals(inst, w_sched)
+        # ---- line 3: y-step -------------------------------------------
+        y_new = milp.solve_y_subproblem(inst, X, lam, rho)
+        # ---- line 4: dual update --------------------------------------
+        viol = X - y_new * inst.p
+        lam = lam + viol
+        cf = w_sched.fwd_makespan(inst)
+        dy = int(np.abs(y_new - y).sum())
+        history.append({"iter": it, "fwd_makespan": cf, "dy": dy,
+                        "violation_l1": float(np.abs(viol).sum())})
+        if verbose:
+            print(f"[admm] it={it} cf={cf} dy={dy} "
+                  f"viol={float(np.abs(viol).sum()):.1f}")
+        y = y_new
+        if track_best:
+            cand = full_schedule_for_assignment(
+                inst, np.argmax(y, axis=0), horizon=T)
+            mk = cand.makespan(inst)
+            if mk < best_mk:
+                best_sched, best_mk = cand, mk
+        # ---- line 5: convergence flags (17), (18) ----------------------
+        if prev_cf is not None and dy < eps1 and abs(cf - prev_cf) < eps2:
+            converged = True
+            break
+        prev_cf = cf
+
+    # ---- line 6: correction (19) — schedule consistent with y* --------
+    assign = np.argmax(y, axis=0)
+    final = full_schedule_for_assignment(inst, assign, horizon=T)
+    if track_best and best_sched is not None and best_mk < final.makespan(inst):
+        final = best_sched
+    check_feasible(inst, final, horizon=T)
+    return AdmmResult(
+        schedule=final,
+        makespan=final.makespan(inst),
+        fwd_makespan=final.fwd_makespan(inst),
+        iterations=it,
+        converged=converged,
+        runtime_s=time.perf_counter() - t0,
+        history=history,
+    )

@@ -1,0 +1,87 @@
+"""balanced-greedy — the scalable heuristic of Sec. VI.
+
+Step 1: static load-balancing assignment. For each client j, among helpers
+with enough free memory (Q_j), pick the one with the fewest assigned clients
+(G_i). Step 2: non-preemptive FCFS scheduling per helper — fwd tasks ordered
+by release times r, bwd tasks by c^f + l + l'.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from . import baker
+from .instance import Instance
+from .schedule import Schedule, check_feasible
+
+
+@dataclasses.dataclass
+class GreedyResult:
+    schedule: Schedule
+    makespan: int
+    runtime_s: float
+
+
+def assign_balanced(inst: Instance, *, order: Optional[List[int]] = None) -> np.ndarray:
+    """Least-loaded feasible helper per client (load = #assigned clients)."""
+    load = np.zeros(inst.I, dtype=np.int64)
+    free_mem = inst.m.astype(np.float64).copy()
+    assign = np.full(inst.J, -1, dtype=np.int64)
+    for j in order if order is not None else range(inst.J):
+        Q = [i for i in range(inst.I)
+             if inst.is_edge(i, j) and free_mem[i] >= inst.d[j]]
+        if not Q:
+            raise ValueError(f"client {j}: no helper with enough free memory")
+        eta = min(Q, key=lambda i: (load[i], i))
+        assign[j] = eta
+        load[eta] += 1
+        free_mem[eta] -= inst.d[j]
+    return assign
+
+
+def schedule_fcfs(inst: Instance, assign: np.ndarray,
+                  *, horizon: Optional[int] = None) -> Schedule:
+    """Non-preemptive FCFS per helper, fwd first by r, then bwd by c^f + l + l'.
+
+    Fwd and bwd tasks share the helper: bwd tasks are queued into the slots
+    left free once they are released, still non-preemptively.
+    """
+    T = int(horizon if horizon is not None else inst.T)
+    x_slots: List[np.ndarray] = [np.array([], dtype=np.int64)] * inst.J
+    z_slots: List[np.ndarray] = [np.array([], dtype=np.int64)] * inst.J
+    for i in range(inst.I):
+        clients = [j for j in range(inst.J) if int(assign[j]) == i]
+        if not clients:
+            continue
+        fjobs = [baker.Job(job_id=j, release=int(inst.r[i, j]),
+                           proc=int(inst.p[i, j]), tail=0) for j in clients]
+        fsol = baker.fcfs_nonpreemptive(fjobs, lambda t: True, T)
+        occupied = set()
+        for j in clients:
+            x_slots[j] = fsol[j]
+            occupied.update(int(t) for t in fsol[j])
+        bjobs = []
+        for j in clients:
+            phi_f = int(fsol[j][-1]) + 1
+            release = phi_f + int(inst.l[i, j]) + int(inst.lp[i, j])
+            bjobs.append(baker.Job(job_id=j, release=release,
+                                   proc=int(inst.pp[i, j]), tail=0))
+        bsol = baker.fcfs_nonpreemptive(bjobs, lambda t: t not in occupied, T)
+        for j in clients:
+            z_slots[j] = bsol[j]
+    return Schedule(assign=np.asarray(assign, dtype=np.int64).copy(),
+                    x_slots=x_slots, z_slots=z_slots)
+
+
+def solve_balanced_greedy(inst: Instance, *, horizon: Optional[int] = None) -> GreedyResult:
+    t0 = time.perf_counter()
+    T = int(horizon if horizon is not None else inst.T)
+    assign = assign_balanced(inst)
+    sched = schedule_fcfs(inst, assign, horizon=T)
+    check_feasible(inst, sched, horizon=T)
+    return GreedyResult(schedule=sched, makespan=sched.makespan(inst),
+                        runtime_s=time.perf_counter() - t0)

@@ -1,0 +1,58 @@
+"""Baseline scheme of Sec. VII: random feasible assignment + FCFS schedule.
+
+"A naive real-time implementation of parallel SL without proactive decisions
+on assignments or scheduling."
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .balanced_greedy import schedule_fcfs
+from .instance import Instance
+from .schedule import Schedule, check_feasible
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    schedule: Schedule
+    makespan: int
+    runtime_s: float
+
+
+def assign_random(inst: Instance, *, seed: int = 0, max_tries: int = 200) -> np.ndarray:
+    """Random assignment subject to memory constraints (rejection sampling
+    with per-client fallback to feasible helpers)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        free_mem = inst.m.astype(np.float64).copy()
+        assign = np.full(inst.J, -1, dtype=np.int64)
+        perm = rng.permutation(inst.J)
+        ok = True
+        for j in perm:
+            cands = [i for i in range(inst.I)
+                     if inst.is_edge(i, int(j)) and free_mem[i] >= inst.d[int(j)]]
+            if not cands:
+                ok = False
+                break
+            i = int(rng.choice(cands))
+            assign[int(j)] = i
+            free_mem[i] -= inst.d[int(j)]
+        if ok:
+            return assign
+    raise ValueError("could not sample a feasible random assignment")
+
+
+def solve_baseline(inst: Instance, *, seed: int = 0,
+                   horizon: Optional[int] = None) -> BaselineResult:
+    t0 = time.perf_counter()
+    T = int(horizon if horizon is not None else inst.T)
+    assign = assign_random(inst, seed=seed)
+    sched = schedule_fcfs(inst, assign, horizon=T)
+    check_feasible(inst, sched, horizon=T)
+    return BaselineResult(schedule=sched, makespan=sched.makespan(inst),
+                          runtime_s=time.perf_counter() - t0)

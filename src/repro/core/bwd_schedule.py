@@ -1,0 +1,81 @@
+"""Algorithm 2 — optimal bwd-prop schedule (Theorem 2), plus the analogous
+fwd-prop scheduler for a fixed assignment.
+
+Both are instances of preemptive single-machine min-max-cost scheduling with
+release dates (Baker et al. 1983), solved per helper in parallel:
+
+* bwd-prop (P_b^i): job j released at ``phi^f_j + l_j + l'_j`` (gradients
+  arrive at helper), proc ``p'_j``, cost ``phi_j + r'_j``. The machine is only
+  available on slots the fwd schedule left free.
+* fwd-prop given y (used by the fast ADMM w-step and local search): job j
+  released at ``r_j``, proc ``p_j``, cost ``phi^f_j + l_j``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import baker
+from .instance import Instance
+from .schedule import Schedule
+
+
+def schedule_bwd(inst: Instance, sched: Schedule, *, horizon: Optional[int] = None) -> Schedule:
+    """Fill in z (bwd-prop) optimally given assignment + fwd schedule (Alg. 2)."""
+    T = int(horizon if horizon is not None else inst.T)
+    z_slots: List[np.ndarray] = [np.array([], dtype=np.int64)] * inst.J
+    for i in range(inst.I):
+        clients = [j for j in range(inst.J) if int(sched.assign[j]) == i]
+        if not clients:
+            continue
+        occupied = set()
+        for j in clients:
+            occupied.update(int(t) for t in sched.x_slots[j])
+        jobs = []
+        for j in clients:
+            release = sched.phi_f(j) + int(inst.l[i, j]) + int(inst.lp[i, j])
+            jobs.append(baker.Job(job_id=j, release=release,
+                                  proc=int(inst.pp[i, j]), tail=int(inst.rp[i, j])))
+        sol = baker.solve_min_max_cost(jobs, lambda t: t not in occupied, T)
+        for j in clients:
+            z_slots[j] = sol[j]
+    return Schedule(assign=sched.assign.copy(),
+                    x_slots=[s.copy() for s in sched.x_slots],
+                    z_slots=z_slots)
+
+
+def schedule_fwd_given_assignment(
+    inst: Instance, assign: np.ndarray, *, horizon: Optional[int] = None
+) -> Schedule:
+    """Optimal preemptive fwd schedule per helper for a fixed assignment.
+
+    Minimizes max_j c^f_j = phi^f_j + l_j per helper, which is exactly the
+    Baker problem with tail = l_j.
+    """
+    T = int(horizon if horizon is not None else inst.T)
+    x_slots: List[np.ndarray] = [np.array([], dtype=np.int64)] * inst.J
+    for i in range(inst.I):
+        clients = [j for j in range(inst.J) if int(assign[j]) == i]
+        if not clients:
+            continue
+        jobs = [
+            baker.Job(job_id=j, release=int(inst.r[i, j]),
+                      proc=int(inst.p[i, j]), tail=int(inst.l[i, j]))
+            for j in clients
+        ]
+        sol = baker.solve_min_max_cost(jobs, lambda t: True, T)
+        for j in clients:
+            x_slots[j] = sol[j]
+    return Schedule(assign=np.asarray(assign, dtype=np.int64).copy(),
+                    x_slots=x_slots,
+                    z_slots=[np.array([], dtype=np.int64)] * inst.J)
+
+
+def full_schedule_for_assignment(
+    inst: Instance, assign: np.ndarray, *, horizon: Optional[int] = None
+) -> Schedule:
+    """Optimal-fwd (Baker) then optimal-bwd (Alg. 2) for a fixed assignment."""
+    fwd = schedule_fwd_given_assignment(inst, assign, horizon=horizon)
+    return schedule_bwd(inst, fwd, horizon=horizon)

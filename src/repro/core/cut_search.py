@@ -1,0 +1,125 @@
+"""Beyond-paper: joint cut-layer + assignment + scheduling optimization.
+
+The paper is "oblivious to the cut layers, which are decided in advance"
+and names per-client cut selection as future work (Sec. VIII). This module
+closes that loop: given the architecture's analytic cost model and the
+device/link catalog, it searches per-client cuts (sigma_1, sigma_2) jointly
+with the workflow optimization:
+
+  outer loop   coordinate descent over per-client cuts (candidate grid from
+               the cost model: cuts that keep part-2 dominant and the cut
+               tensors small),
+  inner loop   the paper's machinery — assignment + optimal preemptive
+               scheduling (Baker fwd + Algorithm 2 bwd) — evaluates each
+               candidate exactly.
+
+This typically beats any fixed-cut configuration because slow clients get
+thinner parts 1/3 while fast clients keep more layers local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bwd_schedule import full_schedule_for_assignment
+from repro.core.balanced_greedy import assign_balanced
+from repro.core.instance import Instance
+from repro.core.schedule import Schedule, check_feasible
+
+
+@dataclasses.dataclass
+class CutSearchResult:
+    cuts: List[Tuple[int, int]]
+    schedule: Schedule
+    instance: Instance
+    makespan: int
+    evaluations: int
+    history: List[dict]
+
+
+def candidate_cuts(num_layers: int, *, max_client_layers: int = None,
+                   stride: int = 1) -> List[Tuple[int, int]]:
+    """Cut grid keeping part-2 the largest part (the SL premise)."""
+    L = num_layers
+    lim = max_client_layers if max_client_layers is not None else max(2, L // 4)
+    out = []
+    for s1 in range(0, lim + 1, stride):
+        for tail in range(0, lim + 1 - s1, stride):
+            s2 = L - tail
+            if s2 - s1 >= max(1, L // 2):
+                out.append((s1, s2))
+    return out
+
+
+def search_cuts(
+    instance_builder: Callable[[Sequence[Tuple[int, int]]], Instance],
+    num_layers: int,
+    J: int,
+    *,
+    init_cut: Optional[Tuple[int, int]] = None,
+    rounds: int = 3,
+    stride: int = 1,
+    max_client_layers: Optional[int] = None,
+    seed: int = 0,
+) -> CutSearchResult:
+    """Coordinate descent over per-client cuts.
+
+    ``instance_builder(cuts)`` must return an Instance whose delays reflect
+    the given per-client cuts (see profiling.scenarios.instance_builder_for).
+    """
+    rng = np.random.default_rng(seed)
+    cands = candidate_cuts(num_layers, stride=stride,
+                           max_client_layers=max_client_layers)
+    cut0 = init_cut if init_cut is not None else cands[len(cands) // 2]
+    cuts = [cut0] * J
+    evals = 0
+    history = []
+
+    def evaluate(cur_cuts):
+        nonlocal evals
+        inst = instance_builder(cur_cuts)
+        assign = assign_balanced(inst)
+        sched = full_schedule_for_assignment(inst, assign)
+        evals += 1
+        return inst, sched, sched.makespan(inst)
+
+    inst, sched, best = evaluate(cuts)
+    history.append({"round": 0, "makespan": best})
+
+    for rnd in range(1, rounds + 1):
+        improved = False
+        # sweep clients from most to least critical
+        order = sorted(range(J), key=lambda j: -sched.completion(inst, j))
+        for j in order:
+            best_local = None
+            # sample a subset of candidates for scalability
+            pool = cands if len(cands) <= 12 else \
+                [cands[i] for i in rng.choice(len(cands), 12, replace=False)]
+            if cuts[j] not in pool:
+                pool = pool + [cuts[j]]
+            for cut in pool:
+                if cut == cuts[j]:
+                    continue
+                trial = list(cuts)
+                trial[j] = cut
+                try:
+                    t_inst, t_sched, mk = evaluate(trial)
+                except ValueError:
+                    continue  # infeasible memory packing for this cut
+                if mk < best:
+                    best_local = (cut, t_inst, t_sched, mk)
+                    best = mk
+            if best_local is not None:
+                cuts[j] = best_local[0]
+                inst, sched = best_local[1], best_local[2]
+                improved = True
+        history.append({"round": rnd, "makespan": best})
+        if not improved:
+            break
+
+    check_feasible(inst, sched)
+    return CutSearchResult(cuts=cuts, schedule=sched, instance=inst,
+                           makespan=best, evaluations=evals, history=history)

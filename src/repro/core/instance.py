@@ -1,0 +1,174 @@
+"""Problem instance for the joint assignment + scheduling problem (Sec. III).
+
+All quantities follow the paper's notation:
+
+* ``J`` clients, ``I`` helpers connected over a bipartite graph. We represent
+  the edge set densely: a missing link is encoded with ``connected[i, j] =
+  False`` (delays on missing links are ignored).
+* Per-edge delay vectors (in integer time slots, see footnote 6):
+    r[i, j]   client-side part-1 fwd + uplink of sigma1 activations
+    p[i, j]   helper fwd-prop of part-2
+    l[i, j]   downlink of sigma2 activations + client part-3 fwd + loss
+    lp[i, j]  client part-3 bwd + uplink of sigma2 gradients      (l')
+    pp[i, j]  helper bwd-prop of part-2                            (p')
+    rp[i, j]  downlink of sigma1 gradients + client part-1 bwd     (r')
+* d[j]  memory (GB) a helper must allocate for client j's part-2 task.
+* m[i]  helper i memory capacity (GB).
+
+The horizon T follows the paper:
+  T = max_{(i,j) in E} (r + l + r' + l') + sum_j max_i (p + p').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Instance:
+    """One batch-makespan problem instance. Arrays indexed [i, j] (helper, client)."""
+
+    r: np.ndarray
+    p: np.ndarray
+    l: np.ndarray
+    lp: np.ndarray
+    pp: np.ndarray
+    rp: np.ndarray
+    d: np.ndarray  # [J] memory demand per client task
+    m: np.ndarray  # [I] memory capacity per helper
+    connected: Optional[np.ndarray] = None  # [I, J] bool; None => complete bipartite
+    mu: Optional[np.ndarray] = None  # [I] per-helper preemption (context switch) cost
+
+    def __post_init__(self):
+        for name in ("r", "p", "l", "lp", "pp", "rp"):
+            a = getattr(self, name)
+            if a.shape != (self.I, self.J):
+                raise ValueError(f"{name} must have shape (I, J)={self.I, self.J}, got {a.shape}")
+            if np.any(a < 0):
+                raise ValueError(f"{name} must be non-negative")
+            if not np.issubdtype(a.dtype, np.integer):
+                raise ValueError(f"{name} must be integer slots (footnote 6); got {a.dtype}")
+        if np.any(self.p <= 0) or np.any(self.pp <= 0):
+            raise ValueError("helper processing times p, p' must be >= 1 slot")
+        if self.connected is not None and self.connected.shape != (self.I, self.J):
+            raise ValueError("connected must have shape (I, J)")
+
+    @property
+    def I(self) -> int:  # noqa: E743  (paper notation)
+        return self.p.shape[0]
+
+    @property
+    def J(self) -> int:
+        return self.p.shape[1]
+
+    def edges(self):
+        """Iterate (i, j) pairs in the edge set."""
+        for i in range(self.I):
+            for j in range(self.J):
+                if self.is_edge(i, j):
+                    yield i, j
+
+    def is_edge(self, i: int, j: int) -> bool:
+        return self.connected is None or bool(self.connected[i, j])
+
+    def feasible_helpers(self, j: int) -> list[int]:
+        return [i for i in range(self.I) if self.is_edge(i, j) and self.d[j] <= self.m[i]]
+
+    # ---- time horizons -------------------------------------------------
+    def _edge_mask(self) -> np.ndarray:
+        if self.connected is None:
+            return np.ones((self.I, self.J), dtype=bool)
+        return self.connected.astype(bool)
+
+    @property
+    def T(self) -> int:
+        """Upper bound on the batch makespan (Sec. III, Time Horizon)."""
+        e = self._edge_mask()
+        trans = int(np.max(np.where(e, self.r + self.l + self.rp + self.lp, 0)))
+        proc = int(np.sum(np.max(np.where(e, self.p + self.pp, 0), axis=0)))
+        return trans + proc
+
+    @property
+    def T_f(self) -> int:
+        """Fwd-prop horizon T_f (Sec. V-A)."""
+        e = self._edge_mask()
+        trans = int(np.max(np.where(e, self.r + self.l, 0)))
+        proc = int(np.sum(np.max(np.where(e, self.p, 0), axis=0)))
+        return trans + proc
+
+    # ---- sanity / feasibility ------------------------------------------
+    def assert_assignable(self) -> None:
+        """Quick check that a feasible assignment can exist (bin-packing relax)."""
+        for j in range(self.J):
+            if not self.feasible_helpers(j):
+                raise ValueError(f"client {j} has no feasible helper (memory/connectivity)")
+
+    def scaled(self, factor: float) -> "Instance":
+        """Re-quantize all delays by ``factor`` (slot-length tuning, Sec. VII).
+
+        ``factor > 1`` means *coarser* slots: delays shrink (ceil), preserving
+        the paper's observation that larger |S_t| overestimates real durations
+        less precisely but shrinks T.
+        """
+        def q(a):
+            return np.maximum(np.ceil(a / factor), 0).astype(np.int64)
+
+        def q1(a):  # processing times must stay >= 1
+            return np.maximum(np.ceil(a / factor), 1).astype(np.int64)
+
+        return Instance(
+            r=q(self.r), p=q1(self.p), l=q(self.l), lp=q(self.lp),
+            pp=q1(self.pp), rp=q(self.rp), d=self.d.copy(), m=self.m.copy(),
+            connected=None if self.connected is None else self.connected.copy(),
+            mu=None if self.mu is None else self.mu.copy(),
+        )
+
+
+def random_instance(
+    J: int,
+    I: int,
+    *,
+    seed: int = 0,
+    r_range=(1, 8),
+    p_range=(1, 10),
+    l_range=(1, 6),
+    lp_range=(1, 6),
+    pp_range=(1, 14),
+    rp_range=(1, 8),
+    mem_tight: float = 2.0,
+    heterogeneity: float = 1.0,
+) -> Instance:
+    """Synthetic instance generator (used by tests & hypothesis strategies).
+
+    ``heterogeneity`` scales the spread of per-helper speeds, mirroring the
+    paper's Scenario 1 (low) vs Scenario 2 (high).
+    """
+    rng = np.random.default_rng(seed)
+
+    def draw(rg, row_speed=None):
+        lo, hi = rg
+        base = rng.integers(lo, hi + 1, size=(I, J)).astype(np.int64)
+        if row_speed is not None:
+            base = np.maximum(1, np.round(base * row_speed[:, None])).astype(np.int64)
+        return base
+
+    # helper speed multipliers: heterogeneity stretches the spread
+    speed = np.exp(rng.normal(0.0, 0.35 * heterogeneity, size=I))
+    r = draw(r_range)
+    p = draw(p_range, speed)
+    l = draw(l_range)
+    lp = draw(lp_range)
+    pp = draw(pp_range, speed)
+    rp = draw(rp_range)
+    d = rng.uniform(0.5, 1.5, size=J)
+    # total capacity ~= mem_tight * total demand, split across helpers
+    cap = mem_tight * d.sum() / I
+    m = rng.uniform(0.8 * cap, 1.2 * cap, size=I)
+    # guarantee feasibility: the largest helper can hold the largest task
+    m[int(np.argmax(m))] = max(m.max(), d.max() * 1.01)
+    inst = Instance(r=r, p=p, l=l, lp=lp, pp=pp, rp=rp, d=d, m=m)
+    inst.assert_assignable()
+    return inst

@@ -1,0 +1,118 @@
+"""Beyond-paper: assignment local search with optimal inner scheduling.
+
+The paper's two methods either iterate ADMM (quality, slow) or balance loads
+greedily (fast, assignment-only). We add a third method: local search over
+assignments (move / swap neighborhoods) where EVERY candidate assignment is
+evaluated with the *optimal* preemptive fwd schedule (Baker) followed by the
+*optimal* bwd schedule (Algorithm 2). Since the inner problem given y is
+polynomial (per-helper decomposition + Theorem 2 machinery), the search
+explores the assignment space with exact makespan evaluations — something
+neither paper method does. Recorded separately in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .balanced_greedy import assign_balanced
+from .bwd_schedule import full_schedule_for_assignment
+from .instance import Instance
+from .schedule import Schedule, check_feasible
+
+
+@dataclasses.dataclass
+class LocalSearchResult:
+    schedule: Schedule
+    makespan: int
+    runtime_s: float
+    evaluations: int
+    moves_taken: int
+
+
+def _mem_ok(inst: Instance, assign: np.ndarray) -> bool:
+    for i in range(inst.I):
+        if sum(inst.d[j] for j in range(inst.J) if assign[j] == i) > inst.m[i] + 1e-9:
+            return False
+    return True
+
+
+def solve_local_search(
+    inst: Instance,
+    *,
+    init: Optional[np.ndarray] = None,
+    max_rounds: int = 20,
+    time_budget_s: float = 30.0,
+    horizon: Optional[int] = None,
+    seed: int = 0,
+) -> LocalSearchResult:
+    """First-improvement local search over move/swap neighborhoods.
+
+    Focuses the neighborhood on the makespan-critical client (the argmax of
+    c_j), which is where a move can actually reduce the objective.
+    """
+    t0 = time.perf_counter()
+    T = int(horizon if horizon is not None else inst.T)
+    rng = np.random.default_rng(seed)
+    assign = (init.copy() if init is not None else assign_balanced(inst))
+    sched = full_schedule_for_assignment(inst, assign, horizon=T)
+    best_mk = sched.makespan(inst)
+    evals, moves = 1, 0
+
+    for _ in range(max_rounds):
+        if time.perf_counter() - t0 > time_budget_s:
+            break
+        completions = [sched.completion(inst, j) for j in range(inst.J)]
+        # try moving each of the k most critical clients
+        critical = list(np.argsort(completions)[::-1][: min(5, inst.J)])
+        improved = False
+        for j in critical:
+            j = int(j)
+            cur = int(assign[j])
+            cands = [i for i in inst.feasible_helpers(j) if i != cur]
+            rng.shuffle(cands)
+            for i in cands:
+                trial = assign.copy()
+                trial[j] = i
+                if not _mem_ok(inst, trial):
+                    continue
+                cand = full_schedule_for_assignment(inst, trial, horizon=T)
+                evals += 1
+                mk = cand.makespan(inst)
+                if mk < best_mk:
+                    assign, sched, best_mk = trial, cand, mk
+                    improved, moves = True, moves + 1
+                    break
+            if improved or time.perf_counter() - t0 > time_budget_s:
+                break
+        if not improved:
+            # swap neighborhood: critical client with a client on another helper
+            jc = int(np.argmax(completions))
+            others = [j for j in range(inst.J) if assign[j] != assign[jc]]
+            rng.shuffle(others)
+            for j2 in others[: 2 * inst.J]:
+                trial = assign.copy()
+                trial[jc], trial[j2] = assign[j2], assign[jc]
+                if not (inst.is_edge(int(trial[jc]), jc)
+                        and inst.is_edge(int(trial[j2]), j2)
+                        and _mem_ok(inst, trial)):
+                    continue
+                cand = full_schedule_for_assignment(inst, trial, horizon=T)
+                evals += 1
+                mk = cand.makespan(inst)
+                if mk < best_mk:
+                    assign, sched, best_mk = trial, cand, mk
+                    improved, moves = True, moves + 1
+                    break
+                if time.perf_counter() - t0 > time_budget_s:
+                    break
+        if not improved:
+            break
+
+    check_feasible(inst, sched, horizon=T)
+    return LocalSearchResult(schedule=sched, makespan=best_mk,
+                             runtime_s=time.perf_counter() - t0,
+                             evaluations=evals, moves_taken=moves)

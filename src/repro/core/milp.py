@@ -1,0 +1,341 @@
+"""Exact ILP formulations of Problem 1 (P), P_f, and the ADMM subproblems.
+
+The paper uses Gurobi; offline we use ``scipy.optimize.milp`` (HiGHS
+branch-and-cut), which is exact. Variables follow Sec. III/IV:
+
+  x_ijt, z_ijt in {0,1}   fwd / bwd processing indicators
+  y_ij in {0,1}           assignment
+  phi_j, c_j              finish / completion times
+  xi                      epigraph variable for the min-max objective
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+from scipy import sparse
+from scipy.optimize import LinearConstraint, Bounds, milp
+
+from .instance import Instance
+from .schedule import Schedule
+
+
+@dataclasses.dataclass
+class MilpResult:
+    schedule: Optional[Schedule]
+    objective: float
+    status: str
+    mip_gap: float
+    runtime_s: float
+
+
+class _Builder:
+    """Tiny sparse MILP builder: named variable groups + triplet constraints."""
+
+    def __init__(self):
+        self.n = 0
+        self.groups: Dict[str, Tuple[int, tuple]] = {}
+        self.lb: List[float] = []
+        self.ub: List[float] = []
+        self.integrality: List[int] = []
+        self.obj: Dict[int, float] = {}
+        self.rows: List[Tuple[Dict[int, float], float, float]] = []
+
+    def add_group(self, name: str, shape: tuple, *, lb=0.0, ub=1.0, integer=True) -> None:
+        size = int(np.prod(shape))
+        self.groups[name] = (self.n, shape)
+        self.n += size
+        self.lb += [lb] * size
+        self.ub += [ub] * size
+        self.integrality += [1 if integer else 0] * size
+
+    def idx(self, name: str, *index) -> int:
+        start, shape = self.groups[name]
+        return start + int(np.ravel_multi_index(index, shape))
+
+    def set_obj(self, var: int, coef: float) -> None:
+        self.obj[var] = self.obj.get(var, 0.0) + coef
+
+    def add_row(self, coefs: Dict[int, float], lo: float, hi: float) -> None:
+        self.rows.append((coefs, lo, hi))
+
+    def solve(self, *, time_limit: Optional[float] = None, mip_rel_gap: float = 0.0):
+        import time as _time
+
+        c = np.zeros(self.n)
+        for k, v in self.obj.items():
+            c[k] = v
+        data, ri, ci = [], [], []
+        lo = np.empty(len(self.rows))
+        hi = np.empty(len(self.rows))
+        for rn, (coefs, a, b) in enumerate(self.rows):
+            lo[rn], hi[rn] = a, b
+            for k, v in coefs.items():
+                ri.append(rn)
+                ci.append(k)
+                data.append(v)
+        A = sparse.csr_matrix((data, (ri, ci)), shape=(len(self.rows), self.n))
+        opts = {"mip_rel_gap": mip_rel_gap, "presolve": True}
+        if time_limit is not None:
+            opts["time_limit"] = time_limit
+        t0 = _time.perf_counter()
+        res = milp(
+            c=c,
+            constraints=LinearConstraint(A, lo, hi),
+            bounds=Bounds(np.array(self.lb), np.array(self.ub)),
+            integrality=np.array(self.integrality),
+            options=opts,
+        )
+        return res, _time.perf_counter() - t0
+
+
+def _extract_schedule(inst: Instance, bld: _Builder, xvec: np.ndarray,
+                      T: int, with_z: bool) -> Schedule:
+    assign = np.full(inst.J, -1, dtype=np.int64)
+    for i in range(inst.I):
+        for j in range(inst.J):
+            if not inst.is_edge(i, j):
+                continue
+            if xvec[bld.idx("y", i, j)] > 0.5:
+                assign[j] = i
+    x_slots, z_slots = [], []
+    for j in range(inst.J):
+        i = int(assign[j])
+        xs = [t for t in range(T) if inst.is_edge(i, j)
+              and xvec[bld.idx("x", i, j, t)] > 0.5]
+        x_slots.append(np.array(sorted(xs), dtype=np.int64))
+        if with_z:
+            zs = [t for t in range(T) if xvec[bld.idx("z", i, j, t)] > 0.5]
+            z_slots.append(np.array(sorted(zs), dtype=np.int64))
+        else:
+            z_slots.append(np.array([], dtype=np.int64))
+    return Schedule(assign=assign, x_slots=x_slots, z_slots=z_slots)
+
+
+def solve_exact(inst: Instance, *, time_limit: Optional[float] = None,
+                mip_rel_gap: float = 0.0, horizon: Optional[int] = None) -> MilpResult:
+    """Exact solution of Problem 1 (the paper's Gurobi reference point)."""
+    T = int(horizon if horizon is not None else inst.T)
+    b = _Builder()
+    b.add_group("x", (inst.I, inst.J, T))
+    b.add_group("z", (inst.I, inst.J, T))
+    b.add_group("y", (inst.I, inst.J))
+    b.add_group("phi", (inst.J,), ub=T, integer=False)
+    b.add_group("c", (inst.J,), ub=2 * T, integer=False)
+    b.add_group("xi", (1,), ub=2 * T, integer=False)
+    b.set_obj(b.idx("xi", 0), 1.0)
+
+    for j in range(inst.J):
+        # xi >= c_j (epigraph)
+        b.add_row({b.idx("xi", 0): 1.0, b.idx("c", j): -1.0}, 0.0, np.inf)
+        # (4): sum_i y_ij = 1
+        b.add_row({b.idx("y", i, j): 1.0 for i in range(inst.I) if inst.is_edge(i, j)},
+                  1.0, 1.0)
+        # (9): c_j = phi_j + sum_i r'_ij y_ij
+        row = {b.idx("c", j): 1.0, b.idx("phi", j): -1.0}
+        for i in range(inst.I):
+            if inst.is_edge(i, j):
+                row[b.idx("y", i, j)] = -float(inst.rp[i, j])
+        b.add_row(row, 0.0, 0.0)
+
+    for i in range(inst.I):
+        # (5): memory
+        row = {b.idx("y", i, j): float(inst.d[j])
+               for j in range(inst.J) if inst.is_edge(i, j)}
+        if row:
+            b.add_row(row, -np.inf, float(inst.m[i]))
+        # (3): single task per slot
+        for t in range(T):
+            row = {}
+            for j in range(inst.J):
+                if inst.is_edge(i, j):
+                    row[b.idx("x", i, j, t)] = 1.0
+                    row[b.idx("z", i, j, t)] = 1.0
+            if row:
+                b.add_row(row, -np.inf, 1.0)
+
+    for i in range(inst.I):
+        for j in range(inst.J):
+            if not inst.is_edge(i, j):
+                # forbid x,z,y on non-edges
+                for t in range(T):
+                    b.ub[b.idx("x", i, j, t)] = 0.0
+                    b.ub[b.idx("z", i, j, t)] = 0.0
+                b.ub[b.idx("y", i, j)] = 0.0
+                continue
+            # (1): release times
+            for t in range(min(int(inst.r[i, j]), T)):
+                b.ub[b.idx("x", i, j, t)] = 0.0
+            # (6), (7): processing totals tied to assignment
+            b.add_row({**{b.idx("x", i, j, t): 1.0 for t in range(T)},
+                       b.idx("y", i, j): -float(inst.p[i, j])}, 0.0, 0.0)
+            b.add_row({**{b.idx("z", i, j, t): 1.0 for t in range(T)},
+                       b.idx("y", i, j): -float(inst.pp[i, j])}, 0.0, 0.0)
+            # (2): precedence z_{ij,t+l+l'} <= (1/p) sum_{tau<t} x
+            off = int(inst.l[i, j] + inst.lp[i, j])
+            # slots below the offset are unreachable by (2)'s index shift;
+            # they are infeasible by definition (bwd before any fwd+l+l')
+            earliest_z = int(inst.r[i, j] + inst.p[i, j]) + off
+            for t in range(min(earliest_z, T)):
+                b.ub[b.idx("z", i, j, t)] = 0.0
+            for t in range(T):
+                tz = t + off
+                if tz >= T:
+                    break
+                row = {b.idx("z", i, j, tz): 1.0}
+                for tau in range(t):
+                    row[b.idx("x", i, j, tau)] = -1.0 / float(inst.p[i, j])
+                b.add_row(row, -np.inf, 0.0)
+            # (8): phi_j >= (t+1) z_ijt
+            for t in range(T):
+                b.add_row({b.idx("phi", j): 1.0,
+                           b.idx("z", i, j, t): -float(t + 1)}, 0.0, np.inf)
+
+    res, rt = b.solve(time_limit=time_limit, mip_rel_gap=mip_rel_gap)
+    if res.x is None:
+        return MilpResult(None, float("inf"), res.message, float("nan"), rt)
+    sched = _extract_schedule(inst, b, res.x, T, with_z=True)
+    gap = float(getattr(res, "mip_gap", 0.0) or 0.0)
+    return MilpResult(sched, float(res.fun), "optimal" if gap <= 1e-6 else "feasible",
+                      gap, rt)
+
+
+def solve_w_subproblem(
+    inst: Instance,
+    y: np.ndarray,
+    lam: np.ndarray,
+    rho: float,
+    *,
+    time_limit: Optional[float] = None,
+    horizon: Optional[int] = None,
+) -> Tuple[Schedule, float]:
+    """Exact w-step of Algorithm 1 (line 2): min L over x, phi^f, c^f.
+
+    Constraints: (1), (12)-(15), (20). ``y`` is [I, J] binary; ``lam`` is
+    [I, J]. Returns (fwd-only Schedule, objective value).
+    """
+    Tf = int(horizon if horizon is not None else inst.T_f)
+    b = _Builder()
+    b.add_group("x", (inst.I, inst.J, Tf))
+    b.add_group("phif", (inst.J,), ub=Tf, integer=False)
+    b.add_group("cf", (inst.J,), ub=2 * Tf, integer=False)
+    b.add_group("xi", (1,), ub=2 * Tf, integer=False)
+    b.add_group("u", (inst.I, inst.J), ub=Tf, integer=False)  # |sum x - y p|
+    b.set_obj(b.idx("xi", 0), 1.0)
+
+    for j in range(inst.J):
+        b.add_row({b.idx("xi", 0): 1.0, b.idx("cf", j): -1.0}, 0.0, np.inf)
+        # (13) with y fixed: c^f_j = phi^f_j + l_{y_j, j}
+        i_assigned = int(np.argmax(y[:, j])) if y[:, j].max() > 0 else None
+        l_j = float(inst.l[i_assigned, j]) if i_assigned is not None else 0.0
+        b.add_row({b.idx("cf", j): 1.0, b.idx("phif", j): -1.0}, l_j, l_j)
+        # (20): total processing across helpers sums to one task
+        row = {}
+        for i in range(inst.I):
+            if inst.is_edge(i, j):
+                for t in range(Tf):
+                    row[b.idx("x", i, j, t)] = 1.0 / float(inst.p[i, j])
+        b.add_row(row, 1.0, 1.0)
+
+    for i in range(inst.I):
+        for t in range(Tf):
+            row = {b.idx("x", i, j, t): 1.0
+                   for j in range(inst.J) if inst.is_edge(i, j)}
+            if row:
+                b.add_row(row, -np.inf, 1.0)  # (14)
+
+    for i in range(inst.I):
+        for j in range(inst.J):
+            if not inst.is_edge(i, j):
+                for t in range(Tf):
+                    b.ub[b.idx("x", i, j, t)] = 0.0
+                continue
+            for t in range(min(int(inst.r[i, j]), Tf)):
+                b.ub[b.idx("x", i, j, t)] = 0.0  # (1)
+            for t in range(Tf):
+                b.add_row({b.idx("phif", j): 1.0,
+                           b.idx("x", i, j, t): -float(t + 1)}, 0.0, np.inf)  # (12)
+            # lagrangian terms: lam_ij * sum_t x_ijt  (the -lam y p part is const)
+            for t in range(Tf):
+                b.set_obj(b.idx("x", i, j, t), float(lam[i, j]))
+            # u_ij >= +/- (sum_t x_ijt - y_ij p_ij)
+            target = float(y[i, j]) * float(inst.p[i, j])
+            row = {b.idx("u", i, j): 1.0}
+            for t in range(Tf):
+                row[b.idx("x", i, j, t)] = -1.0
+            b.add_row(row, -target, np.inf)
+            row = {b.idx("u", i, j): 1.0}
+            for t in range(Tf):
+                row[b.idx("x", i, j, t)] = 1.0
+            b.add_row(row, target, np.inf)
+            b.set_obj(b.idx("u", i, j), rho / 2.0)
+
+    res, _ = b.solve(time_limit=time_limit, mip_rel_gap=1e-4)
+    if res.x is None:
+        raise RuntimeError(f"w-subproblem infeasible: {res.message}")
+    # extract: fwd slots per (i, j); a client may be split across helpers here
+    assign = np.full(inst.J, -1, dtype=np.int64)
+    x_slots = []
+    for j in range(inst.J):
+        per_helper = {}
+        for i in range(inst.I):
+            if not inst.is_edge(i, j):
+                continue
+            s = [t for t in range(Tf) if res.x[b.idx("x", i, j, t)] > 0.5]
+            if s:
+                per_helper[i] = s
+        # dominant helper = the one doing most work (used for c^f accounting)
+        if per_helper:
+            dom = max(per_helper, key=lambda k: len(per_helper[k]))
+        else:
+            dom = 0
+        assign[j] = dom
+        allslots = sorted(t for s in per_helper.values() for t in s)
+        x_slots.append(np.array(allslots, dtype=np.int64))
+    sched = Schedule(assign=assign, x_slots=x_slots,
+                     z_slots=[np.array([], dtype=np.int64)] * inst.J)
+    return sched, float(res.fun)
+
+
+def solve_y_subproblem(
+    inst: Instance,
+    x_totals: np.ndarray,
+    lam: np.ndarray,
+    rho: float,
+) -> np.ndarray:
+    """Exact y-step of Algorithm 1 (line 3): generalized assignment MILP.
+
+    With x fixed, the Lagrangian is linear in y:
+      cost(y_ij=1) - cost(y_ij=0) =
+        -lam_ij p_ij + rho/2 (|X_ij - p_ij| - X_ij).
+    """
+    b = _Builder()
+    b.add_group("y", (inst.I, inst.J))
+    for i in range(inst.I):
+        for j in range(inst.J):
+            if not inst.is_edge(i, j):
+                b.ub[b.idx("y", i, j)] = 0.0
+                continue
+            X = float(x_totals[i, j])
+            w = (-float(lam[i, j]) * float(inst.p[i, j])
+                 + (rho / 2.0) * (abs(X - float(inst.p[i, j])) - X))
+            b.set_obj(b.idx("y", i, j), w)
+    for j in range(inst.J):
+        b.add_row({b.idx("y", i, j): 1.0
+                   for i in range(inst.I) if inst.is_edge(i, j)}, 1.0, 1.0)
+    for i in range(inst.I):
+        row = {b.idx("y", i, j): float(inst.d[j])
+               for j in range(inst.J) if inst.is_edge(i, j)}
+        if row:
+            b.add_row(row, -np.inf, float(inst.m[i]))
+    res, _ = b.solve()
+    if res.x is None:
+        raise RuntimeError(f"y-subproblem infeasible: {res.message}")
+    y = np.zeros((inst.I, inst.J), dtype=np.int64)
+    for i in range(inst.I):
+        for j in range(inst.J):
+            if inst.is_edge(i, j) and res.x[b.idx("y", i, j)] > 0.5:
+                y[i, j] = 1
+    return y

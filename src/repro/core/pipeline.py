@@ -1,0 +1,105 @@
+"""Beyond-paper: multi-batch pipelined scheduling.
+
+The paper optimizes ONE batch update and multiplies (Sec. III, "Epochs &
+Aggregation"), noting only that clients can be "moved earlier" when slots
+free up. But consecutive batches of the SAME client are independent until
+the round boundary, so helper idle slots within one batch's horizon can
+host the NEXT batch's fwd-prop tasks. This module schedules K consecutive
+batches jointly:
+
+* every client contributes K (fwd, bwd) task chains; chain k's fwd release
+  is ``r_ij + k * client_cycle`` (the client can only produce activations
+  after finishing its part-1 of the previous batch),
+* helper occupancy is shared across all chains,
+* scheduling per helper is first-come-first-served over READY tasks with
+  preemption allowed at slot boundaries (list scheduling), which preserves
+  feasibility under the same constraints as the paper's model.
+
+The metric is the K-batch makespan; the win over K * (single-batch
+makespan) is the pipelining gain reported in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .instance import Instance
+from .schedule import Schedule, check_feasible
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    makespan: int                 # completion of ALL K batches
+    single_batch_makespan: int    # the schedule's first-batch makespan
+    sequential_makespan: int      # K x single-batch (the paper's regime)
+    gain_pct: float
+    per_batch_completion: List[int]
+
+
+def _client_cycle(inst: Instance, i: int, j: int) -> int:
+    """Min slots between consecutive fwd releases of client j (its own
+    part-1 fwd + part-1 bwd of the previous batch)."""
+    return max(1, int(inst.r[i, j] + inst.rp[i, j]))
+
+
+def schedule_pipelined(inst: Instance, assign: np.ndarray, K: int,
+                       *, horizon_mult: int = None) -> PipelineResult:
+    """List-schedule K batches per client through the shared helpers."""
+    T = inst.T * (K if horizon_mult is None else horizon_mult)
+    J = inst.J
+    # task state per (client, batch): phase 0 = fwd, 1 = bwd
+    remaining = {}
+    ready_at = {}
+    completion = np.zeros((J, K), dtype=np.int64)
+    for j in range(J):
+        i = int(assign[j])
+        for k in range(K):
+            remaining[(j, k, 0)] = int(inst.p[i, j])
+            remaining[(j, k, 1)] = int(inst.pp[i, j])
+            ready_at[(j, k, 0)] = int(inst.r[i, j]) + k * _client_cycle(inst, i, j)
+            ready_at[(j, k, 1)] = None  # set once fwd completes
+
+    finished_fwd_at = {}
+    for t in range(T):
+        all_done = True
+        for i in range(inst.I):
+            # pick the ready task with earliest ready time (FCFS, preemptive)
+            best = None
+            for (j, k, ph), rem in remaining.items():
+                if rem <= 0 or int(assign[j]) != i:
+                    continue
+                all_done = False
+                ra = ready_at[(j, k, ph)]
+                if ra is None or ra > t:
+                    continue
+                key = (ra, k, ph, j)
+                if best is None or key < best[0]:
+                    best = (key, (j, k, ph))
+            if best is None:
+                continue
+            j, k, ph = best[1]
+            remaining[(j, k, ph)] -= 1
+            if remaining[(j, k, ph)] == 0:
+                if ph == 0:
+                    finished_fwd_at[(j, k)] = t + 1
+                    ready_at[(j, k, 1)] = (t + 1 + int(inst.l[i, j])
+                                           + int(inst.lp[i, j]))
+                else:
+                    completion[j, k] = t + 1 + int(inst.rp[i, j])
+        if all_done:
+            break
+    if any(v > 0 for v in remaining.values()):
+        raise RuntimeError("pipeline horizon too small")
+
+    per_batch = [int(completion[:, k].max()) for k in range(K)]
+    single = per_batch[0]
+    seq = single * K
+    mk = per_batch[-1]
+    gain = 100.0 * (seq - mk) / seq
+    return PipelineResult(makespan=mk, single_batch_makespan=single,
+                          sequential_makespan=seq, gain_pct=gain,
+                          per_batch_completion=per_batch)

@@ -1,0 +1,163 @@
+"""Schedule representation + feasibility evaluation (constraints (1)-(9)).
+
+A schedule stores, per client, the assigned helper and the *sorted slot lists*
+where its fwd-prop (x) and bwd-prop (z) tasks occupy the helper. The sparse
+representation keeps memory at O(total processing time) instead of O(|E| T).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .instance import Instance
+
+
+@dataclasses.dataclass
+class Schedule:
+    assign: np.ndarray  # [J] helper index per client (y)
+    x_slots: List[np.ndarray]  # [J] sorted slot indices of fwd-prop on assigned helper
+    z_slots: List[np.ndarray]  # [J] sorted slot indices of bwd-prop on assigned helper
+
+    def phi_f(self, j: int) -> int:
+        """Fwd-prop finish slot (phi^f_j): last fwd slot + 1 (end of S_t)."""
+        return int(self.x_slots[j][-1]) + 1 if len(self.x_slots[j]) else 0
+
+    def phi(self, j: int) -> int:
+        """Bwd-prop finish slot (phi_j)."""
+        return int(self.z_slots[j][-1]) + 1 if len(self.z_slots[j]) else 0
+
+    def completion_fwd(self, inst: Instance, j: int) -> int:
+        """c^f_j = phi^f_j + l_{ij} (13)."""
+        i = int(self.assign[j])
+        return self.phi_f(j) + int(inst.l[i, j])
+
+    def completion(self, inst: Instance, j: int) -> int:
+        """c_j = phi_j + r'_{ij} (9)."""
+        i = int(self.assign[j])
+        return self.phi(j) + int(inst.rp[i, j])
+
+    def makespan(self, inst: Instance) -> int:
+        """max_j c_j — the batch training makespan (Problem 1 objective)."""
+        return max(self.completion(inst, j) for j in range(inst.J))
+
+    def fwd_makespan(self, inst: Instance) -> int:
+        """max_j c^f_j — the P_f objective."""
+        return max(self.completion_fwd(inst, j) for j in range(inst.J))
+
+    def num_preemptions(self, j: int) -> int:
+        """Count task switches for client j (gaps inside x/z slot runs)."""
+        n = 0
+        for slots in (self.x_slots[j], self.z_slots[j]):
+            if len(slots) > 1:
+                n += int(np.sum(np.diff(slots) > 1))
+        return n
+
+    def makespan_with_preemption_cost(self, inst: Instance) -> float:
+        """Sec. VI extension: each task switch at helper i costs mu_i slots.
+
+        The switching penalty is charged to the client whose task is split,
+        matching the modified (13): c_j includes mu_i * (#switch boundaries of
+        its x/z runs).
+        """
+        if inst.mu is None:
+            return float(self.makespan(inst))
+        worst = 0.0
+        for j in range(inst.J):
+            i = int(self.assign[j])
+            switches = 0
+            for slots in (self.x_slots[j], self.z_slots[j]):
+                if len(slots) == 0:
+                    continue
+                # |x_t - x_{t+1}| summed over t counts 2 per run (start+stop);
+                # a task "just started" costs one switch, so runs == switches.
+                runs = 1 + int(np.sum(np.diff(slots) > 1))
+                switches += runs
+            worst = max(worst, self.completion(inst, j) + float(inst.mu[i]) * switches)
+        return worst
+
+
+class InfeasibleScheduleError(AssertionError):
+    pass
+
+
+def check_feasible(inst: Instance, sched: Schedule, *, horizon: Optional[int] = None) -> None:
+    """Verify constraints (1)-(9). Raises InfeasibleScheduleError on violation."""
+    T = horizon if horizon is not None else inst.T
+    busy: Dict[int, Dict[int, int]] = {i: {} for i in range(inst.I)}  # helper -> slot -> client
+
+    for j in range(inst.J):
+        i = int(sched.assign[j])
+        if not inst.is_edge(i, j):
+            raise InfeasibleScheduleError(f"client {j} assigned to non-neighbor helper {i}")
+        xs, zs = sched.x_slots[j], sched.z_slots[j]
+        # (6), (7): exactly p_ij fwd slots and p'_ij bwd slots on assigned helper
+        if len(xs) != inst.p[i, j]:
+            raise InfeasibleScheduleError(
+                f"client {j}: {len(xs)} fwd slots != p={inst.p[i, j]}")
+        if len(zs) != inst.pp[i, j]:
+            raise InfeasibleScheduleError(
+                f"client {j}: {len(zs)} bwd slots != p'={inst.pp[i, j]}")
+        # (1): release time
+        if xs[0] < inst.r[i, j]:
+            raise InfeasibleScheduleError(
+                f"client {j}: fwd starts at {xs[0]} before release r={inst.r[i, j]}")
+        # (2): bwd-prop precedence — first bwd slot >= phi^f + l + l'
+        ready = sched.phi_f(j) + int(inst.l[i, j]) + int(inst.lp[i, j])
+        if zs[0] < ready:
+            raise InfeasibleScheduleError(
+                f"client {j}: bwd starts at {zs[0]} before ready time {ready}")
+        for slots in (xs, zs):
+            if np.any(np.diff(slots) <= 0):
+                raise InfeasibleScheduleError(f"client {j}: slots not strictly increasing")
+            if slots[-1] >= T:
+                raise InfeasibleScheduleError(
+                    f"client {j}: slot {slots[-1]} beyond horizon T={T}")
+            for t in slots:
+                t = int(t)
+                # (3): one task per helper per slot
+                if t in busy[i]:
+                    raise InfeasibleScheduleError(
+                        f"helper {i} double-booked at slot {t} "
+                        f"(clients {busy[i][t]} and {j})")
+                busy[i][t] = j
+
+    # (5): helper memory
+    for i in range(inst.I):
+        load = sum(inst.d[j] for j in range(inst.J) if sched.assign[j] == i)
+        if load > inst.m[i] + 1e-9:
+            raise InfeasibleScheduleError(
+                f"helper {i}: memory {load:.3f} > capacity {inst.m[i]:.3f}")
+
+
+def queuing_delay(inst: Instance, sched: Schedule, j: int) -> int:
+    """phi_j - (r + p + l + l' + p') — the client's total queuing delay (Sec. IV)."""
+    i = int(sched.assign[j])
+    ideal = int(inst.r[i, j] + inst.p[i, j] + inst.l[i, j] + inst.lp[i, j] + inst.pp[i, j])
+    return sched.phi(j) - ideal
+
+
+def lower_bound(inst: Instance) -> int:
+    """A simple valid lower bound on the optimal makespan.
+
+    LB = max over clients of the no-queue critical path on their *best*
+    feasible helper, and per-helper load bounds under any assignment.
+    """
+    # per-client critical path on best helper
+    best_path = 0
+    for j in range(inst.J):
+        paths = [
+            int(inst.r[i, j] + inst.p[i, j] + inst.l[i, j]
+                + inst.lp[i, j] + inst.pp[i, j] + inst.rp[i, j])
+            for i in inst.feasible_helpers(j)
+        ]
+        best_path = max(best_path, min(paths))
+    # machine-load bound: even a perfect split must process sum of min work
+    total_min_work = sum(
+        min(int(inst.p[i, j] + inst.pp[i, j]) for i in inst.feasible_helpers(j))
+        for j in range(inst.J)
+    )
+    load_bound = -(-total_min_work // inst.I)  # ceil
+    return max(best_path, load_bound)

@@ -1,0 +1,117 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window / softcap).
+
+TPU-native tiling: queries are processed in [block_q, D] VMEM tiles, keys and
+values stream through [block_k, D] tiles along the minor (sequential) grid
+axis; the online-softmax state (m, l, acc) lives in VMEM scratch that
+persists across the k-block sweep. GQA is handled without materializing
+repeated K/V: the K/V index_map divides the (batch*head) grid coordinate by
+the query-group size.
+
+Validated in interpret mode against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, num_kb: int, scale: float,
+                  causal: bool, window: Optional[int],
+                  softcap: Optional[float], seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # [block_q, D]
+    k = k_ref[0].astype(jnp.float32)              # [block_k, D]
+    v = v_ref[0].astype(jnp.float32)              # [block_k, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_k                          # padding
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == num_kb - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: [BH, Sq, D]; k, v: [BKV, Sk, D] with BH = BKV * rep.
+
+    Sequence lengths are padded to block multiples internally; D should be a
+    multiple of 128 for MXU alignment on real TPUs (ops.py pads).
+    """
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    rep = BH // BKV
+    scale = 1.0 / (D ** 0.5)
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    num_qb = q.shape[1] // block_q
+    num_kb = k.shape[1] // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, num_kb=num_kb,
+        scale=scale, causal=causal, window=window, softcap=softcap, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, num_qb, num_kb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki, rep=rep: (b // rep, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki, rep=rep: (b // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,57 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel body
+runs in Python, validating the exact TPU program); on a real TPU pass
+``interpret=False``. ``flash_attention_op`` additionally pads head_dim to a
+multiple of 128 for MXU lane alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       block_q: int = 128, block_k: int = 128,
+                       interpret: Optional[bool] = None):
+    """q: [B, Sq, H, D]; k, v: [B, Sk, KV, D]. Returns [B, Sq, H, D]."""
+    interpret = (not ON_TPU) if interpret is None else interpret
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    padD = (-D) % 128
+    scale_fix = ((D + padD) / D) ** 0.5  # kernel scales by padded dim
+    if padD:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, padD))) * scale_fix
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, padD)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, padD)))
+    Dp = D + padD
+    # fold heads into batch; queries grouped so GQA maps to index division
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, Dp)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dp)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, Dp)
+    out = flash_attention(qf, kf, vf, causal=causal, window=window,
+                          softcap=softcap, block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+    out = out.reshape(B, H, Sq, Dp).transpose(0, 2, 1, 3)
+    return out[..., :D]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_op(x, dt, A, B, C, D, *, chunk: int = 64,
+           interpret: Optional[bool] = None):
+    """Chunked SSD scan; see ssd_scan.py for shapes."""
+    interpret = (not ON_TPU) if interpret is None else interpret
+    return ssd_scan(x, dt, A, B, C, D, chunk=chunk, interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth: the
+model-side implementations in ``repro.models``)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.attention import _dot_attention, attn_mask
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q: [BH, Sq, D]; k, v: [BKV, Sk, D]. Oracle for the flash kernel."""
+    BH, Sq, D = q.shape
+    BKV, Sk, _ = k.shape
+    rep = BH // BKV
+    # reshape into the model-side [B, S, H, D] convention with B = BKV
+    qm = q.reshape(BKV, rep, Sq, D).transpose(0, 2, 1, 3)  # [BKV, Sq, rep, D]
+    km = k[:, :, None, :]
+    vm = v[:, :, None, :]
+    q_pos = jnp.broadcast_to(jnp.arange(Sq)[None], (BKV, Sq))
+    k_pos = jnp.broadcast_to(jnp.arange(Sk)[None], (BKV, Sk))
+    mask = attn_mask(q_pos, k_pos, causal=causal, window=window)
+    out = _dot_attention(qm, km, vm, mask, softcap)       # [BKV, Sq, rep, D]
+    return out.transpose(0, 2, 1, 3).reshape(BH, Sq, D)
+
+
+def ssd_ref(x, dt, A, B, C, D, *, chunk: int):
+    """Oracle for the SSD kernel: the model-side chunked scan."""
+    return ssd_chunked(x, dt, A, B, C, D, chunk=chunk)

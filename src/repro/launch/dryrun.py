@@ -1,0 +1,125 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and dump roofline terms.
+
+This file MUST set XLA_FLAGS before any other import (jax locks the device
+count on first init) — hence the two lines above.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, shape_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, memory_summary
+from repro.launch.steps import lower_step
+from repro.profiling.cost_model import model_flops_6nd
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            *, rt_overrides=None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.perf_counter()
+    lowered, meta = lower_step(cfg, mesh, shape, rt_overrides=rt_overrides)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    if shape.kind == "train":
+        mf = model_flops_6nd(cfg, shape.global_batch, shape.seq_len) / n_chips
+    else:
+        # fwd-only: 2 N D (decode: D = batch tokens)
+        toks = (shape.global_batch * shape.seq_len
+                if shape.kind == "prefill" else shape.global_batch)
+        mf = 2.0 * cfg.active_param_count() * toks / n_chips
+
+    hlo = compiled.as_text()
+    roof = analyze(compiled, model_flops_per_device=mf, hlo_text=hlo)
+    mem = memory_summary(compiled)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips, "kind": meta["kind"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "hlo_bytes": len(hlo),
+    }
+    if verbose:
+        ma = mem
+        per_dev_gb = (ma.get("argument_size_in_bytes", 0)
+                      + ma.get("temp_size_in_bytes", 0)) / 1e9
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile={t_compile:.1f}s args+temp={per_dev_gb:.2f}GB/dev "
+              f"flops/dev={roof.flops:.3e} dominant={roof.dominant}")
+        print(f"         memory_analysis: {ma}")
+        print(f"         cost_analysis: flops={roof.flops:.4e} "
+              f"bytes={roof.bytes_accessed:.4e} coll={roof.coll_bytes}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON results")
+    args = ap.parse_args()
+
+    combos = []
+    archs = sorted(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = (sorted(INPUT_SHAPES) if (args.all or args.shape is None)
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            if shape_supported(get_config(a), s):
+                for mp in meshes:
+                    combos.append((a, s, mp))
+
+    results, failures = [], []
+    for a, s, mp in combos:
+        tag = f"{a}__{s}__{'multi' if mp else 'single'}"
+        if args.out and os.path.exists(os.path.join(args.out, tag + ".json")):
+            print(f"[dryrun] skip {tag} (done)")
+            continue
+        try:
+            res = run_one(a, s, mp)
+            results.append(res)
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            failures.append((tag, str(e)[:500]))
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                with open(os.path.join(args.out, tag + ".FAILED.json"), "w") as f:
+                    json.dump({"tag": tag, "error": str(e)[:2000]}, f)
+    print(f"\n[dryrun] {len(results)} ok, {len(failures)} failed "
+          f"out of {len(combos)}")
+    for tag, err in failures:
+        print(f"  FAIL {tag}: {err[:200]}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,293 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so anything
+inside ``lax.scan`` (layer stacks, KV-block attention, microbatching) is
+undercounted by its trip count. This module re-derives the roofline inputs
+by parsing the scheduled HLO text into its computation graph:
+
+  * per-computation matmul FLOPs (dot ops, contracting dims from the attrs),
+  * an HBM-traffic proxy (result + operand bytes of non-layout ops at
+    fusion granularity — fusion-internal values stay on-chip),
+  * per-collective wire bytes (ring accounting over replica groups),
+
+and aggregating ENTRY -> calls with ``while`` bodies multiplied by their
+``backend_config known_trip_count`` (fallback: the largest s32 constant in
+the loop condition).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w.\-]+)\s+\((.*)\)\s+->")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+_LAYOUT_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "reshape", "transpose", "broadcast", "iota",
+               "after-all", "partition-id", "replica-id"}
+
+
+def _shapes_of(txt: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(txt):
+        dims = tuple(int(x) for x in m.group(2).split(",")) if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        b = _DTYPE_BYTES.get(dt, 0)
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * b
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+    params: Dict[str, List[Tuple[str, Tuple[int, ...]]]]
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and line.rstrip().endswith("{"):
+            params = {}
+            for pm in re.finditer(
+                    r"([\w.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)",
+                    h.group(3)):
+                params[pm.group(1)] = _shapes_of(pm.group(2))
+            cur = Computation(name=h.group(2), is_entry=bool(h.group(1)),
+                              instrs=[], params=params)
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shapes_txt, opcode = m.group(1), m.group(2), m.group(3)
+        rest = line[m.end():]
+        paren = rest.split("),", 1)
+        operand_txt = paren[0]
+        attrs = paren[1] if len(paren) > 1 else rest
+        cur.instrs.append(Instr(
+            name=name, shapes=_shapes_of(shapes_txt), opcode=opcode,
+            operands=_OPERAND_RE.findall(operand_txt), attrs=attrs))
+    return comps
+
+
+def _group_size(attrs: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:
+        g = m.group(1)
+        return max(len(g.split(",")) if g else 1, 1)
+    return default
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    memory_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.memory_bytes += other.memory_bytes * mult
+        for k in self.coll:
+            self.coll[k] += other.coll[k] * mult
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        self.fused = set()
+        self.trip: Dict[str, int] = {}
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                if ins.opcode == "fusion":
+                    for cm in re.finditer(r"calls=%([\w.\-]+)", ins.attrs):
+                        self.fused.add(cm.group(1))
+                if ins.opcode == "while":
+                    bm = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                    tm = _TRIP_RE.search(ins.attrs)
+                    trip = int(tm.group(1)) if tm else None
+                    if trip is None:
+                        cm = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+                        trip = self._cond_trip(cm.group(1)) if cm else 1
+                    if bm:
+                        self.trip[bm.group(1)] = trip
+        self._cache: Dict[str, Totals] = {}
+        self.unresolved_dots = 0
+
+    def _cond_trip(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for ins in comp.instrs:
+            if ins.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", ins.attrs) or \
+                    re.search(r"constant\((\d+)\)", str(ins.operands))
+                # constants keep their value inside the original line; re-find:
+        # fallback: scan raw attr text of all instrs
+        for ins in comp.instrs:
+            for m in re.finditer(r"constant\((\d+)\)", ins.attrs):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # -- shape resolution ---------------------------------------------------
+    def _symbol_shapes(self, comp: Computation) -> Dict[str, List]:
+        table: Dict[str, List] = dict(comp.params)
+        for ins in comp.instrs:
+            table[ins.name] = ins.shapes
+        return table
+
+    def _dot_flops(self, comp: Computation, ins: Instr,
+                   table: Dict[str, List]) -> float:
+        res_elems = 1
+        for _, dims in ins.shapes:
+            for d in dims:
+                res_elems *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+        lhs = table.get(ins.operands[0]) if ins.operands else None
+        if not m or not lhs or not lhs[0][1]:
+            self.unresolved_dots += 1
+            return 0.0
+        cdims = [int(x) for x in m.group(1).split(",")] if m.group(1) else []
+        k = 1
+        for c in cdims:
+            if c < len(lhs[0][1]):
+                k *= lhs[0][1][c]
+        # batch dims are part of the result; 2*M*N*K*B accounting
+        return 2.0 * res_elems * k
+
+    # -- aggregation ----------------------------------------------------------
+    def totals(self, comp_name: str) -> Totals:
+        if comp_name in self._cache:
+            return self._cache[comp_name]
+        comp = self.comps.get(comp_name)
+        t = Totals()
+        if comp is None:
+            self._cache[comp_name] = t
+            return t
+        self._cache[comp_name] = t  # break cycles defensively
+        table = self._symbol_shapes(comp)
+        in_fused = comp_name in self.fused
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                t.flops += self._dot_flops(comp, ins, table)
+            elif ins.opcode in _COLLECTIVES or any(
+                    ins.opcode == c + "-start" for c in _COLLECTIVES):
+                base = ins.opcode.replace("-start", "")
+                size = _bytes_of(ins.shapes)
+                g = _group_size(ins.attrs)
+                if base == "all-reduce":
+                    wire = 2.0 * (g - 1) / g * size
+                elif base in ("all-gather", "all-to-all"):
+                    wire = (g - 1) / g * size
+                elif base == "reduce-scatter":
+                    wire = (g - 1) * size
+                else:
+                    wire = size
+                t.coll[base] += wire
+                t.memory_bytes += size
+            elif ins.opcode == "fusion":
+                callee = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+                if callee:
+                    sub = self.totals(callee.group(1))
+                    t.flops += sub.flops
+                    for k in t.coll:
+                        t.coll[k] += sub.coll[k]
+                # memory at fusion granularity: result + operand bytes
+                t.memory_bytes += _bytes_of(ins.shapes)
+                for op in ins.operands:
+                    t.memory_bytes += _bytes_of(table.get(op, []))
+            elif ins.opcode == "while":
+                bm = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                cm = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+                if bm:
+                    trip = self.trip.get(bm.group(1), 1)
+                    t.add(self.totals(bm.group(1)), trip)
+                if cm:
+                    t.add(self.totals(cm.group(1)), 1.0)
+            elif ins.opcode in ("call", "conditional", "custom-call",
+                                "async-start"):
+                for cm in re.finditer(
+                        r"(?:to_apply|calls|branch_computations=\{?)=?%([\w.\-]+)",
+                        ins.attrs):
+                    t.add(self.totals(cm.group(1)), 1.0)
+                t.memory_bytes += _bytes_of(ins.shapes)
+            elif ins.opcode in _LAYOUT_OPS:
+                continue
+            elif ins.opcode in ("dynamic-slice", "gather"):
+                # reads only the slice, not the whole buffer
+                t.memory_bytes += 2 * _bytes_of(ins.shapes)
+            elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                # writes only the update (operand 1), aliased in place
+                upd = (table.get(ins.operands[1], [])
+                       if len(ins.operands) > 1 else [])
+                t.memory_bytes += 2 * _bytes_of(upd)
+            else:
+                if not in_fused:
+                    # standalone op: results + operands move through HBM
+                    t.memory_bytes += _bytes_of(ins.shapes)
+                    for op in ins.operands:
+                        t.memory_bytes += _bytes_of(table.get(op, []))
+                else:
+                    if ins.opcode == "dot":
+                        pass  # handled above
+        return t
+
+    def entry_totals(self) -> Totals:
+        for name, comp in self.comps.items():
+            if comp.is_entry:
+                return self.totals(name)
+        raise ValueError("no ENTRY computation found")
+
+
+def analyze_text(text: str) -> Totals:
+    return HloAnalyzer(text).entry_totals()

@@ -1,0 +1,166 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (we budget 45 GB/s effective per chip).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_bw
+
+``cost_analysis()`` on the SPMD-partitioned module reports PER-DEVICE flops
+and bytes; collective bytes are parsed from the compiled HLO text (operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 45e9            # effective bytes/s / chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[8,128]{1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        g = m.group(1)
+        return max(len(g.split(",")) if g else 1, 1)
+    return default
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Estimated per-device WIRE bytes of every collective, from the result
+    shapes of the (per-device, scheduled) HLO. Ring-algorithm accounting:
+      all-reduce      2 (g-1)/g * size      (size = result = operand)
+      all-gather      (g-1)/g   * size      (result = gathered)
+      reduce-scatter  (g-1)     * size      (result = scattered shard)
+      all-to-all      (g-1)/g   * size
+      collective-permute        size
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    # "<name> = <shape|(tuple)> <op>(...), ..."
+    op_re = re.compile(
+        r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+(" + "|".join(_COLLECTIVES)
+        + r")(?:-start)?\(")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if not m:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        size = 0
+        for sm in _SHAPE_RE.finditer(shapes):
+            size += _shape_bytes(sm.group(1), sm.group(2))
+        g = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * (g - 1) / g * size
+        elif op in ("all-gather", "all-to-all"):
+            wire = (g - 1) / g * size
+        elif op == "reduce-scatter":
+            wire = (g - 1) * size
+        else:  # collective-permute
+            wire = size
+        out[op] += int(wire)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+    xla_flops: Optional[float] = None   # raw cost_analysis (while body x1)
+    xla_bytes: Optional[float] = None
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, model_flops_per_device: Optional[float] = None,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms from the compiled module.
+
+    FLOPs / HBM bytes / collective wire bytes come from the trip-count-aware
+    HLO graph analyzer (hlo_analysis) — XLA's cost_analysis counts while
+    bodies once, undercounting everything inside lax.scan. The raw XLA
+    numbers are kept in ``xla_flops``/``xla_bytes`` for reference.
+    """
+    from .hlo_analysis import analyze_text
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    totals = analyze_text(text)
+    flops = max(totals.flops, xla_flops)
+    byts = max(totals.memory_bytes, xla_bytes)
+    coll = {k: int(v) for k, v in totals.coll.items()}
+    coll_total = float(sum(coll.values()))
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": byts / HBM_BW,
+        "collective": coll_total / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops_per_device / flops
+              if model_flops_per_device and flops else None)
+    return Roofline(
+        flops=flops, bytes_accessed=byts, coll_bytes=coll,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], dominant=dominant,
+        model_flops=model_flops_per_device, useful_ratio=useful,
+        xla_flops=xla_flops, xla_bytes=xla_bytes)
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out

@@ -1,0 +1,74 @@
+"""Batched serving launcher: prefill + decode loop with KV/SSM caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b-smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.transformer import (Runtime, init_caches, init_params,
+                                      serve_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not cfg.causal:
+        raise SystemExit(f"{cfg.arch_id} is encoder-only: no decode")
+    rt = Runtime()
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+    caches = init_caches(cfg, args.batch, max_len, rt, dtype=jnp.float32)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+
+    step = jax.jit(lambda c, t, p: serve_step(cfg, params, c, t, p, rt))
+
+    # prefill via token-by-token feed (keeps one compiled step; a production
+    # deployment would use the prefill step from launch.steps)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, caches = step(caches, prompt[:, t:t + 1], jnp.int32(t))
+    prefill_s = time.perf_counter() - t0
+
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        out_tokens.append(np.asarray(tok))
+        logits, caches = step(caches, tok, jnp.int32(args.prompt_len + i))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    decode_s = time.perf_counter() - t0
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] {cfg.arch_id}: batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {prefill_s:.2f}s, "
+          f"decoded {args.gen} tok in {decode_s:.2f}s "
+          f"({args.batch * args.gen / max(decode_s, 1e-9):.1f} tok/s)")
+    print("[serve] generated token ids (first row):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,232 @@
+"""Step builders for the production launcher: train_step / prefill_step /
+serve_step with full sharding annotations, plus abstract ``input_specs`` for
+the dry-run (ShapeDtypeStruct only — no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.transformer import (Runtime, abstract_params, forward,
+                                      init_caches, layer_table, loss_fn,
+                                      serve_step)
+from repro.optim.adam import Adam
+from .mesh import auto_pspec, batch_sharding, fsdp_axes, param_shardings
+
+
+def make_runtime(cfg: ModelConfig, mesh: Mesh, kind: str,
+                 long_context: bool = False, *,
+                 moe_override: Optional[str] = None,
+                 remat: bool = True,
+                 scan_layers: bool = True,
+                 seq_parallel_attn: bool = False) -> Runtime:
+    multi_pod = "pod" in mesh.axis_names
+    if cfg.moe is None:
+        moe_mode = "dense"
+    elif moe_override is not None:
+        moe_mode = moe_override
+    else:
+        moe_mode = "ep_local" if kind == "decode" else "ep_a2a"
+    return Runtime(
+        scan_layers=scan_layers and kind != "decode",
+        moe_mode=moe_mode,
+        mesh=mesh,
+        data_axes=fsdp_axes(multi_pod),
+        model_axis="model",
+        long_context=long_context,
+        remat=remat and kind == "train",
+        fsdp_gather=True,
+        seq_parallel_attn=seq_parallel_attn,
+    )
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (dry-run)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input. Weak-type-correct,
+    shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "vision":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, rt: Runtime):
+    return init_caches(cfg, shape.global_batch, shape.seq_len, rt,
+                       dtype=jnp.bfloat16, abstract=True)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                    rt: Runtime):
+    """Shard caches: batch over fsdp axes; kv-heads / ssm-heads over model.
+    For batch=1 long-context, the sequence axis takes the fsdp axes."""
+    multi_pod = "pod" in mesh.axis_names
+    fsdp = fsdp_axes(multi_pod)
+    B = shape.global_batch
+    batch_ok = B % int(jnp.prod(jnp.array([mesh.shape[a] for a in fsdp]))) == 0
+
+    model_size = mesh.shape["model"]
+
+    def shard(leaf):
+        s = leaf.shape
+        wanted = [None] * len(s)
+        if batch_ok:
+            wanted[0] = fsdp
+        elif len(s) >= 2 and s[1] > 1024:  # seq-shard long caches
+            wanted[1] = fsdp
+        if len(s) == 4:   # [B, S|W, KV, D] or ssm [B, H, P, N]
+            if s[2] % model_size == 0:
+                wanted[2] = "model"
+            elif wanted[1] is None and s[1] % model_size == 0:
+                # KV heads cannot shard over the model axis (e.g. 8 kv heads
+                # on 16-way TP): shard the SEQUENCE dim instead — otherwise
+                # the cache replicates per device (nemotron decode: 158 GB!)
+                wanted[1] = "model"
+        return NamedSharding(mesh, auto_pspec(s, wanted, mesh))
+
+    caches = cache_specs(cfg, shape, rt)
+    return jax.tree.map(shard, caches)
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, mesh: Mesh, rt: Runtime,
+                     optimizer: Optional[Adam] = None,
+                     microbatches: int = 1):
+    """With ``microbatches > 1`` the global batch is split along axis 0 and
+    gradients are accumulated with lax.scan — the standard activation-memory
+    lever (perf-iteration knob)."""
+    opt = optimizer or Adam(lr=1e-4)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, rt), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, b):
+                (loss_a, aux_a, g_a) = carry
+                (l, m), g = grads_of(params, b)
+                g2 = jax.tree.map(lambda a, x: a + x.astype(jnp.float32),
+                                  g_a, g)
+                return (loss_a + l, aux_a + m["aux"], g2), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_s, aux_s, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), jnp.zeros(()), zeros), mb)
+            loss = loss_s / microbatches
+            metrics = {"ce": loss, "aux": aux_s / microbatches}
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss, **metrics}
+
+    return train_step, opt
+
+
+def build_prefill_step(cfg: ModelConfig, rt: Runtime):
+    def prefill_step(params, batch):
+        logits, _ = forward(cfg, params, batch, rt)
+        # return only the last-position logits (the serving interface)
+        return logits[:, -1]
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, rt: Runtime):
+    def decode_step(params, caches, batch):
+        logits, new_caches = serve_step(cfg, params, caches,
+                                        batch["tokens"], batch["pos"], rt)
+        return logits, new_caches
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# Dry-run lowering for one (arch x shape x mesh)
+# --------------------------------------------------------------------------
+def lower_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+               *, rt_overrides: Optional[dict] = None,
+               rules: Optional[dict] = None, microbatches: int = 1):
+    """Lower (not compile) the appropriate step. Returns (lowered, meta)."""
+    overrides = dict(rt_overrides or {})
+    long_ctx = overrides.pop(
+        "long_context",
+        shape.kind == "decode" and shape.seq_len > 100_000)
+    rt = make_runtime(cfg, mesh, shape.kind, long_context=long_ctx,
+                      **overrides)
+    pshard = param_shardings(cfg, mesh, rules=rules)
+    params_abs = abstract_params(cfg, jnp.bfloat16)
+    bshard_fn = batch_sharding(mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        from repro.optim.adam import AdamState
+        step, opt = build_train_step(cfg, mesh, rt, microbatches=microbatches)
+        opt_abs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_abs)
+        opt_state_abs = AdamState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                                  m=opt_abs, v=opt_abs)
+        opt_shard = AdamState(step=NamedSharding(mesh, P()),
+                              m=pshard, v=pshard)
+        bshard = jax.tree.map(lambda s: bshard_fn(len(s.shape)), specs)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, opt_shard, bshard),
+                         out_shardings=(pshard, opt_shard,
+                                        NamedSharding(mesh, P())),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_state_abs, specs)
+        return lowered, {"kind": "train"}
+
+    if shape.kind == "prefill":
+        step = build_prefill_step(cfg, rt)
+        bshard = jax.tree.map(lambda s: bshard_fn(len(s.shape)), specs)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=bshard_fn(2))
+        lowered = jitted.lower(params_abs, specs)
+        return lowered, {"kind": "prefill"}
+
+    # decode
+    step = build_decode_step(cfg, rt)
+    cshard = cache_shardings(cfg, mesh, shape, rt)
+    caches_abs = cache_specs(cfg, shape, rt)
+    B = shape.global_batch
+    tok_shard = (bshard_fn(2) if B > 1 else NamedSharding(mesh, P(None, None)))
+    multi_pod = "pod" in mesh.axis_names
+    logit_wanted = ([fsdp_axes(multi_pod), None, None] if B > 1
+                    else [None, None, "model"])
+    logit_shard = NamedSharding(
+        mesh, auto_pspec((B, 1, cfg.vocab_size), logit_wanted, mesh))
+    bshard = {"tokens": tok_shard, "pos": NamedSharding(mesh, P())}
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, cshard, bshard),
+                     out_shardings=(logit_shard, cshard),
+                     donate_argnums=(1,))
+    lowered = jitted.lower(params_abs, caches_abs,
+                           {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                            "pos": jax.ShapeDtypeStruct((), jnp.int32)})
+    return lowered, {"kind": "decode"}

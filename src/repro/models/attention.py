@@ -1,0 +1,232 @@
+"""Attention: GQA with RoPE, sliding windows, softcapping, QK-norm, and
+DeepSeek-style Multi-head Latent Attention (MLA). Includes decode caches.
+
+Two compute paths:
+  * ``dot``       — materializes [.., S_q, S_k] scores (short sequences);
+  * ``blockwise`` — lax.scan over KV blocks with an online softmax (long
+    sequences; the pure-JAX analogue of the Pallas flash kernel, and the
+    oracle it is tested against).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from .norms import rmsnorm
+
+BLOCKWISE_THRESHOLD = 2048  # switch to online-softmax attention beyond this
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: [...]; returns cos, sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, D]; rotates pairs (d, d+half)."""
+    half = x.shape[-1] // 2
+    cos, sin = rope_freqs(x.shape[-1], theta, positions)  # [B, S, half]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+# --------------------------------------------------------------------------
+# Masks
+# --------------------------------------------------------------------------
+INVALID_POS = 2 ** 30  # sentinel for unfilled cache slots / padding
+
+
+def attn_mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """[.., S_q, S_k] boolean mask; True = attend."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = (k_pos < INVALID_POS // 2)[..., None, :]  # exclude sentinel slots
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return ok
+
+
+# --------------------------------------------------------------------------
+# Core attention computations
+# --------------------------------------------------------------------------
+def _dot_attention(q, k, v, mask, softcap):
+    """q: [B,Sq,H,D], k: [B,Sk,KV,D], v: [B,Sk,KV,Dv], H = KV*rep.
+    mask: [B,Sq,Sk]. Dv may differ from D (MLA)."""
+    B, Sq, H, D = q.shape
+    KV, Dv = k.shape[2], v.shape[3]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, D)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(D))
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w, v)
+    return out.reshape(B, Sq, H, Dv)
+
+
+def _blockwise_attention(q, k, v, q_pos, k_pos, *, causal, window, softcap,
+                         block: int = 1024):
+    """Online-softmax attention over KV blocks (O(S) memory)."""
+    B, Sq, H, D = q.shape
+    Sk, KV, Dv = k.shape[1], k.shape[2], v.shape[3]
+    rep = H // KV
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=INVALID_POS)
+    kb = k.reshape(B, nblk, block, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, KV, Dv).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(B, nblk, block).transpose(1, 0, 2)
+    qg = q.reshape(B, Sq, KV, rep, D)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qg, kc).astype(jnp.float32)
+        s = s / jnp.sqrt(jnp.float32(D))
+        s = _softcap(s, softcap)
+        ok = attn_mask(q_pos, pc, causal=causal, window=window)
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkrqs,bskd->bkrqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, rep, Sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Sq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, Sq, Dv), dtype=jnp.float32)
+    # checkpoint each KV-block step: backward recomputes the [.., Sq, block]
+    # probability tile instead of storing all of them (flash-style memory)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def multi_head_attention(q, k, v, q_pos, k_pos, *, causal, window, softcap,
+                         force_blockwise: Optional[bool] = None):
+    use_blockwise = (k.shape[1] > BLOCKWISE_THRESHOLD
+                     if force_blockwise is None else force_blockwise)
+    if use_blockwise:
+        return _blockwise_attention(q, k, v, q_pos, k_pos, causal=causal,
+                                    window=window, softcap=softcap)
+    mask = attn_mask(q_pos, k_pos, causal=causal, window=window)
+    return _dot_attention(q, k, v, mask, softcap)
+
+
+# --------------------------------------------------------------------------
+# GQA block mixer
+# --------------------------------------------------------------------------
+def gqa_forward(params, x, positions, cfg: ModelConfig, *, window=None,
+                kv_override=None, seq_parallel: Optional[tuple] = None):
+    """x: [B, S, d] -> [B, S, d].
+
+    ``kv_override``: (k, v, k_pos) for decode against a cache.
+    ``seq_parallel``: (data_axes, model_axis) — shard queries along seq over
+    the model axis and replicate K/V (for head counts < model-axis size).
+    """
+    B, S, _ = x.shape
+    H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if kv_override is not None:
+        k, v, k_pos = kv_override(k, v)
+    else:
+        k_pos = positions
+    if seq_parallel is not None and kv_override is None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh, data_axes, model_axis = seq_parallel
+        ns = lambda spec: NamedSharding(mesh, spec)
+        q = jax.lax.with_sharding_constraint(
+            q, ns(P(tuple(data_axes), model_axis, None, None)))
+        k = jax.lax.with_sharding_constraint(
+            k, ns(P(tuple(data_axes), None, None, None)))
+        v = jax.lax.with_sharding_constraint(
+            v, ns(P(tuple(data_axes), None, None, None)))
+    out = multi_head_attention(q, k, v, positions, k_pos,
+                               causal=cfg.causal, window=window,
+                               softcap=cfg.attn_softcap)
+    if seq_parallel is not None and kv_override is None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh, data_axes, model_axis = seq_parallel
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(mesh, P(tuple(data_axes), None, None, None)))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek V3)
+# --------------------------------------------------------------------------
+def mla_forward(params, x, positions, cfg: ModelConfig, *, cache_override=None):
+    """Multi-head Latent Attention.
+
+    Query path:  x -> wq_a [d, qr] -> norm -> wq_b [qr, H*(dn+dr)]
+    KV path:     x -> wkv_a [d, kvr + dr]; latent c_kv normed; k_rope shared
+                 across heads; wkv_b [kvr, H*(dn+dv)].
+    ``cache_override(c_kv, k_rope)`` returns full-history (c_kv, k_rope,
+    k_pos) for decode.
+    """
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q_lat = jnp.einsum("bsd,dq->bsq", x, params["wq_a"])
+    q_lat = rmsnorm(q_lat, params["q_norm"])
+    q = jnp.einsum("bsq,qhk->bshk", q_lat, params["wq_b"])  # k = dn + dr
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dk->bsk", x, params["wkv_a"])  # k = kvr + dr
+    c_kv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = rmsnorm(c_kv, params["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache_override is not None:
+        c_kv, k_rope, k_pos = cache_override(c_kv, k_rope)
+    else:
+        k_pos = positions
+
+    kvb = jnp.einsum("bsk,khv->bshv", c_kv, params["wkv_b"])  # v = dn + dv
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], H, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = multi_head_attention(q_full, k, v, positions, k_pos,
+                               causal=True, window=None, softcap=None)
+    return jnp.einsum("bshv,hvd->bsd", out, params["wo"])

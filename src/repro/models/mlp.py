@@ -1,0 +1,31 @@
+"""Dense MLP variants: SwiGLU, GeGLU, GELU, squared-ReLU (Nemotron)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(kind: str, x):
+    if kind in ("swiglu",):
+        return jax.nn.silu(x)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind}")
+
+
+def is_gated(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+def mlp_forward(params, x, kind: str):
+    """x: [..., d]. Gated kinds use fused wi: [d, 2, ff]."""
+    if is_gated(kind):
+        h = jnp.einsum("...d,dgf->...gf", x, params["wi"])
+        h = _act(kind, h[..., 0, :]) * h[..., 1, :]
+    else:
+        h = _act(kind, jnp.einsum("...d,df->...f", x, params["wi"]))
+    return jnp.einsum("...f,fd->...d", h, params["wo"])

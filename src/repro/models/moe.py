@@ -1,0 +1,240 @@
+"""Mixture-of-Experts block.
+
+Two implementations:
+
+* ``dense`` — exact oracle: every expert computed on every token, masked by
+  router weights. Used for smoke tests / correctness (small E only).
+* ``ep_a2a`` — production expert parallelism, TPU-native: tokens are routed
+  with top-k, bucketed per destination device (experts sharded over the
+  ``model`` mesh axis), exchanged with ``jax.lax.all_to_all`` inside
+  ``shard_map``, processed with ``jax.lax.ragged_dot`` (MegaBlocks-style
+  grouped matmul, no [T, E, C] one-hot blowup), and returned. Over-capacity
+  entries are dropped (standard capacity-factor semantics).
+
+Router aux loss is the switch-style load-balance loss E * sum_e f_e P_e.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from .mlp import mlp_forward
+
+
+def router_topk(logits, k: int):
+    """logits: [T, E] -> (weights [T, k] normalized, ids [T, k], probs [T, E])."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, ids, probs
+
+
+def load_balance_loss(probs, ids, num_experts: int):
+    """Switch-transformer aux loss: E * sum_e fraction_e * prob_e."""
+    T = probs.shape[0]
+    counts = jnp.zeros((num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(ids.size, 1)
+    mean_prob = probs.mean(axis=0)
+    return num_experts * jnp.sum(frac * mean_prob)
+
+
+def _expert_ffn_dense(params, x, e: int):
+    """SwiGLU expert e over all tokens. params['wi']: [E, d, 2, ff]."""
+    h = jnp.einsum("td,dgf->tgf", x, params["wi"][e])
+    h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    return jnp.einsum("tf,fd->td", h, params["wo"][e])
+
+
+def moe_dense(params, x, cfg: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact masked-dense MoE. x: [T, d]."""
+    logits = jnp.einsum("td,de->te", x, params["router"])
+    weights, ids, probs = router_topk(logits, cfg.experts_per_token)
+    aux = load_balance_loss(probs, ids, cfg.num_experts)
+    gate = jnp.zeros((x.shape[0], cfg.num_experts), jnp.float32)
+    gate = gate.at[jnp.arange(x.shape[0])[:, None], ids].add(weights)
+    out = jnp.zeros_like(x)
+    for e in range(cfg.num_experts):
+        out = out + gate[:, e : e + 1].astype(x.dtype) * _expert_ffn_dense(params, x, e)
+    return out, aux
+
+
+def _grouped_ffn(wi, wo, x_sorted, group_sizes):
+    """ragged_dot SwiGLU over expert-sorted rows. wi: [E, d, 2, ff]."""
+    gate = jax.lax.ragged_dot(x_sorted, wi[:, :, 0, :], group_sizes)
+    up = jax.lax.ragged_dot(x_sorted, wi[:, :, 1, :], group_sizes)
+    h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)).astype(x_sorted.dtype)
+    return jax.lax.ragged_dot(h, wo, group_sizes)
+
+
+def moe_ep_shard(params, x, cfg: MoEConfig, axis_name: str,
+                 pmean_axes: Tuple[str, ...] = ()):
+    """Per-shard body of the expert-parallel MoE (runs under shard_map).
+
+    x: [T_loc, d] local tokens. params['wi']: [E_loc, d, 2, ff] — the local
+    shard of the expert weights. Experts are sharded over ``axis_name``.
+    """
+    n_dev = jax.lax.axis_size(axis_name)
+    T, d = x.shape
+    E = cfg.num_experts
+    E_loc = E // n_dev
+    k = cfg.experts_per_token
+
+    logits = jnp.einsum("td,de->te", x, params["router"])
+    weights, ids, probs = router_topk(logits, k)
+    aux = load_balance_loss(probs, ids, E)
+    for ax in pmean_axes:
+        aux = jax.lax.pmean(aux, ax)
+
+    N = T * k
+    flat_ids = ids.reshape(N)                      # expert id per entry
+    flat_w = weights.reshape(N)
+    dest = flat_ids // E_loc                       # destination device
+    local_eid = flat_ids % E_loc                   # expert id on destination
+    # position of each entry within its destination bucket
+    order = jnp.argsort(dest, stable=True)
+    ranks = jnp.zeros((N,), jnp.int32).at[order].set(jnp.arange(N, dtype=jnp.int32))
+    dest_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.bincount(dest, length=n_dev)).astype(jnp.int32)])[:-1]
+    pos = ranks - dest_start[dest]
+    C = int(-(-N * cfg.capacity_factor // n_dev))  # per-destination capacity
+    valid = pos < C
+    # over-capacity entries go to a dump slot C (sliced off) so they cannot
+    # clobber valid entries
+    pos_w = jnp.where(valid, pos, C)
+
+    # ---- pack send buffers [n_dev, C, ...] and exchange ------------------
+    send_x = jnp.zeros((n_dev, C + 1, d), x.dtype).at[dest, pos_w].set(
+        x[jnp.arange(N) // k])[:, :C]
+    send_eid = jnp.zeros((n_dev, C + 1), jnp.int32).at[dest, pos_w].set(
+        local_eid)[:, :C]
+    send_valid = jnp.zeros((n_dev, C + 1), jnp.bool_).at[dest, pos_w].set(
+        valid)[:, :C]
+    recv_x = jax.lax.all_to_all(send_x, axis_name, 0, 0, tiled=False)
+    recv_eid = jax.lax.all_to_all(send_eid[..., None], axis_name, 0, 0)[..., 0]
+    recv_valid = jax.lax.all_to_all(send_valid[..., None].astype(jnp.int8),
+                                    axis_name, 0, 0)[..., 0]
+
+    # ---- local grouped expert compute ------------------------------------
+    M = n_dev * C
+    rx = recv_x.reshape(M, d)
+    reid = recv_eid.reshape(M)
+    rvalid = recv_valid.reshape(M) > 0
+    # invalid slots -> expert 0 with zero input (cheap, correct on return)
+    reid = jnp.where(rvalid, reid, 0)
+    sort_idx = jnp.argsort(reid, stable=True)
+    x_sorted = rx[sort_idx]
+    group_sizes = jnp.bincount(reid, length=E_loc).astype(jnp.int32)
+    y_sorted = _grouped_ffn(params["wi"], params["wo"], x_sorted, group_sizes)
+    y_local = jnp.zeros_like(rx).at[sort_idx].set(y_sorted)
+
+    # ---- return path ------------------------------------------------------
+    back = jax.lax.all_to_all(y_local.reshape(n_dev, C, d), axis_name, 0, 0)
+    pos_g = jnp.where(valid, pos, 0)               # clamped gather index
+    gathered = back[dest, pos_g]                   # [N, d]
+    contrib = jnp.where(valid[:, None], gathered, 0) * flat_w[:, None].astype(x.dtype)
+    out = jnp.zeros_like(x).at[jnp.arange(N) // k].add(contrib)
+    return out, aux
+
+
+def moe_ep_local_shard(params, x, cfg: MoEConfig, axis_name: str,
+                       pmean_axes: Tuple[str, ...] = ()):
+    """Replicated-token expert parallelism (for decode: few tokens, no a2a).
+
+    Every rank along ``axis_name`` sees the SAME tokens, computes only its
+    local experts' contributions via ragged_dot, and psums the output.
+    x: [T, d] (identical across the axis). params['wi']: [E_loc, d, 2, ff].
+    """
+    n_dev = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    T, d = x.shape
+    E = cfg.num_experts
+    E_loc = E // n_dev
+    k = cfg.experts_per_token
+
+    logits = jnp.einsum("td,de->te", x, params["router"])
+    weights, ids, probs = router_topk(logits, k)
+    aux = load_balance_loss(probs, ids, E)
+    for ax in pmean_axes:
+        aux = jax.lax.pmean(aux, ax)
+
+    N = T * k
+    flat_ids = ids.reshape(N)
+    flat_w = weights.reshape(N)
+    local = (flat_ids // E_loc) == me
+    # non-local entries go to a dummy group E_loc (zero-weight expert)
+    gid = jnp.where(local, flat_ids % E_loc, E_loc)
+    sort_idx = jnp.argsort(gid, stable=True)
+    x_sorted = x[(jnp.arange(N) // k)[sort_idx]]
+    group_sizes = jnp.bincount(gid, length=E_loc + 1).astype(jnp.int32)
+    zpad = jnp.zeros((1,) + params["wi"].shape[1:], params["wi"].dtype)
+    wi = jnp.concatenate([params["wi"], zpad], axis=0)
+    wo = jnp.concatenate(
+        [params["wo"], jnp.zeros((1,) + params["wo"].shape[1:],
+                                 params["wo"].dtype)], axis=0)
+    y_sorted = _grouped_ffn(wi, wo, x_sorted, group_sizes)
+    y_entries = jnp.zeros_like(y_sorted).at[sort_idx].set(y_sorted)
+    contrib = jnp.where(local[:, None], y_entries, 0) * flat_w[:, None].astype(x.dtype)
+    out = jnp.zeros_like(x).at[jnp.arange(N) // k].add(contrib)
+    return jax.lax.psum(out, axis_name), aux
+
+
+def moe_forward(params, x, model_cfg: ModelConfig, *, mode: str = "dense",
+                mesh=None, data_axes: Tuple[str, ...] = ("data",),
+                model_axis: str = "model"):
+    """x: [B, S, d] -> (y, aux_loss). Adds shared experts if configured.
+
+    * ``dense``    — oracle (no mesh needed).
+    * ``ep_a2a``   — shard_map: tokens split over (data_axes, model_axis),
+                     experts over model_axis, exchanged with all_to_all.
+    * ``ep_local`` — shard_map: tokens split over data_axes only (replicated
+                     over model_axis), experts local + psum. For decode.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    cfg = model_cfg.moe
+    B, S, d = x.shape
+    if mode == "dense":
+        y, aux = moe_dense(params, x.reshape(B * S, d), cfg)
+        y = y.reshape(B, S, d)
+    elif mode in ("ep_a2a", "ep_local"):
+        if mesh is None:
+            raise ValueError(f"moe mode {mode} requires a mesh")
+        all_axes = tuple(data_axes) + (model_axis,)
+        pspec_params = {
+            "router": P(),
+            "wi": P(model_axis),
+            "wo": P(model_axis),
+        }
+        if cfg.num_shared_experts:
+            pspec_params["shared"] = {"wi": P(), "wo": P()}
+        ep_params = {k_: params[k_] for k_ in pspec_params}
+        if mode == "ep_a2a":
+            xspec = P(tuple(data_axes), model_axis, None)
+            body = lambda p, xx: moe_ep_shard(
+                p, xx.reshape(-1, d), cfg, model_axis, all_axes)
+        else:
+            xspec = P(tuple(data_axes), None, None)
+            body = lambda p, xx: moe_ep_local_shard(
+                p, xx.reshape(-1, d), cfg, model_axis, all_axes)
+
+        def wrapped(p, xx):
+            bs, ss = xx.shape[:2]
+            y_flat, aux_ = body(p, xx)
+            return y_flat.reshape(bs, ss, d), aux_
+
+        y, aux = shard_map(
+            wrapped, mesh=mesh,
+            in_specs=(pspec_params, xspec),
+            out_specs=(xspec, P()))(ep_params, x)
+    else:
+        raise ValueError(f"unknown moe mode {mode}")
+    if cfg.num_shared_experts > 0:
+        xt = x.reshape(B * S, d)
+        y = y + mlp_forward(params["shared"], xt, "swiglu").reshape(B, S, d)
+    return y, aux

@@ -1,0 +1,30 @@
+"""Normalization layers (pure functions over param dicts)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, gemma_style: bool = True):
+    """RMSNorm. ``gemma_style`` uses (1 + scale) parameterization."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * (var + eps) ** -0.5
+    w = (1.0 + scale.astype(jnp.float32)) if gemma_style else scale.astype(jnp.float32)
+    return (y * w).astype(dtype)
+
+
+def layernorm(x, scale, bias, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * (var + eps) ** -0.5
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x, params: dict, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])

@@ -1,0 +1,141 @@
+"""Split-model execution: part-1 / part-2 / part-3 (Sec. I, Fig. 2).
+
+``split_params`` carves the stacked parameter tree at the cut layers
+(sigma_1, sigma_2). Layer kinds are STATIC structure (``SplitSpec``), kept
+out of the parameter pytrees so parts jit/vjp cleanly. Each part is executed
+by its own pure function so that clients and helpers hold ONLY their own
+parameters, and gradients flow across the cuts exactly as in real split
+learning: activations travel forward, cotangents travel backward
+(chained ``jax.vjp``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .norms import apply_norm
+from .transformer import (Runtime, block_forward, cross_entropy, layer_table)
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitSpec:
+    """Static structure of a (sigma_1, sigma_2) split."""
+    cut: Tuple[int, int]
+    kinds1: Tuple[Tuple[str, str], ...]  # (kind, mlp_kind) per layer
+    kinds2: Tuple[Tuple[str, str], ...]
+    kinds3: Tuple[Tuple[str, str], ...]
+
+
+def make_split_spec(cfg: ModelConfig,
+                    cut: Optional[Tuple[int, int]] = None) -> SplitSpec:
+    s1, s2 = cut if cut is not None else cfg.sl_cuts_resolved
+    table = layer_table(cfg)
+    kinds = [(k, m) for k, m, _, _ in table]
+    return SplitSpec(cut=(s1, s2), kinds1=tuple(kinds[:s1]),
+                     kinds2=tuple(kinds[s1:s2]), kinds3=tuple(kinds[s2:]))
+
+
+def split_params(cfg: ModelConfig, params,
+                 cut: Optional[Tuple[int, int]] = None):
+    """Returns (spec, p1, p2, p3). Each part's "layers" is a LIST of
+    per-layer parameter trees (arrays only)."""
+    spec = make_split_spec(cfg, cut)
+    s1, s2 = spec.cut
+    table = layer_table(cfg)
+
+    def layer_blocks(lo, hi):
+        out = []
+        for li in range(lo, hi):
+            _, _, key, pos = table[li]
+            bp = params["groups"][key]
+            if key != "shared":
+                bp = jax.tree.map(lambda a: a[pos], bp)
+            out.append(bp)
+        return out
+
+    p1 = {"embed": params["embed"], "layers": layer_blocks(0, s1)}
+    p2 = {"layers": layer_blocks(s1, s2)}
+    p3 = {"layers": layer_blocks(s2, cfg.num_layers),
+          "final_norm": params["final_norm"]}
+    if not cfg.tie_embeddings:
+        p3["lm_head"] = params["lm_head"]
+    else:
+        p3["embed_out"] = params["embed"]  # tied head travels with part-3
+    return spec, p1, p2, p3
+
+
+def _run_layers(cfg: ModelConfig, kinds, layers: List, x, positions,
+                rt: Runtime):
+    for (kind, mlp_kind), bp in zip(kinds, layers):
+        x, _, _ = block_forward(cfg, kind, mlp_kind, bp, x, positions, rt)
+    return x
+
+
+def part1_forward(cfg: ModelConfig, spec: SplitSpec, p1, batch: Dict,
+                  rt: Runtime):
+    """Client-side: embed + layers [0, s1). Returns activations of sigma_1."""
+    if cfg.frontend == "audio":
+        x = batch["frames"]
+    else:
+        tokens = batch["tokens"]
+        e = p1["embed"][tokens]
+        x = e * jnp.asarray(jnp.sqrt(jnp.float32(cfg.d_model)), e.dtype)
+        if cfg.frontend == "vision":
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return _run_layers(cfg, spec.kinds1, p1["layers"], x, positions, rt)
+
+
+def part2_forward(cfg: ModelConfig, spec: SplitSpec, p2, acts, rt: Runtime):
+    """Helper-side: layers [s1, s2). acts: [B, S, d] from the client."""
+    B, S = acts.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return _run_layers(cfg, spec.kinds2, p2["layers"], acts, positions, rt)
+
+
+def part3_forward_loss(cfg: ModelConfig, spec: SplitSpec, p3, acts,
+                       batch: Dict, rt: Runtime):
+    """Client-side: layers [s2, L) + head + loss."""
+    B, S = acts.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = _run_layers(cfg, spec.kinds3, p3["layers"], acts, positions, rt)
+    h = apply_norm(h, p3["final_norm"], cfg.norm)
+    head = p3.get("lm_head")
+    if head is not None:
+        logits = jnp.einsum("bsd,dv->bsv", h, head)
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h, p3["embed_out"])
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.frontend == "audio":
+        return cross_entropy(logits, batch["labels"])
+    S_text = batch["tokens"].shape[1]
+    tl = logits[:, -S_text:]
+    return cross_entropy(tl[:, :-1], batch["tokens"][:, 1:])
+
+
+def sl_batch_grads(cfg: ModelConfig, spec: SplitSpec, p1, p2, p3, batch,
+                   rt: Runtime):
+    """One SL batch update's gradients, with TRUE split gradient flow.
+
+    Returns (loss, g1, g2, g3, traffic) where traffic reports the bytes that
+    crossed each cut (matching the cost model's r/l/l'/r' legs).
+    """
+    a1, vjp1 = jax.vjp(lambda p: part1_forward(cfg, spec, p, batch, rt), p1)
+    a2, vjp2 = jax.vjp(lambda p, a: part2_forward(cfg, spec, p, a, rt), p2, a1)
+    loss, vjp3 = jax.vjp(
+        lambda p, a: part3_forward_loss(cfg, spec, p, a, batch, rt), p3, a2)
+    g3, g_a2 = vjp3(jnp.ones_like(loss))
+    g2, g_a1 = vjp2(g_a2)
+    (g1,) = vjp1(g_a1)
+    traffic = {
+        "cut1_bytes": a1.size * a1.dtype.itemsize,
+        "cut2_bytes": a2.size * a2.dtype.itemsize,
+    }
+    return loss, g1, g2, g3, traffic

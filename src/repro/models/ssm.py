@@ -1,0 +1,163 @@
+"""Mamba2 block — SSD (state-space duality) [arXiv:2405.21060].
+
+Training path uses the chunked SSD algorithm (quadratic within chunks,
+linear recurrence across chunks); decode path is the O(1) state update.
+The chunked scan is also the pure-jnp oracle for the Pallas SSD kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from .norms import rmsnorm
+
+
+def segsum(x):
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} x[..., k] for
+    j < i (lower-triangular), -inf above diagonal. x: [..., Q]."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int,
+                init_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Chunked SSD scan (pure jnp reference).
+
+    x : [b, S, H, P]   per-head inputs
+    dt: [b, S, H]      softplus-ed step sizes (>0)
+    A : [H]            negative decay rates (A < 0 enforced by caller)
+    B : [b, S, N]      input projection (single group)
+    C : [b, S, N]      output projection
+    D : [H]            skip connection
+    Returns y: [b, S, H, P] (+ final ssm state [b, H, P, N] if requested).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, f"seq {S} not divisible by chunk {chunk}"
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                       # [b,nc,Q,H] (<0)
+    dA_cum = jnp.cumsum(dA, axis=2)                         # within-chunk
+    # 1) intra-chunk (quadratic) term
+    L = jnp.exp(segsum(dA.transpose(0, 1, 3, 2)))           # [b,nc,H,Q,Q]
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)          # [b,nc,Q,Q]
+    M = scores[:, :, None] * L                              # [b,nc,H,Q,Q]
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtc, xc)
+    # 2) chunk states: state_c = sum_k exp(dA_cum[end]-dA_cum[k]) dt_k B_k x_k
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # [b,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                        Bc, dtc * decay_to_end, xc)          # [b,nc,H,P,N]
+    # 3) inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # [b,nc,H]
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state BEFORE this chunk
+
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [b,nc,H,P,N]
+    # 4) inter-chunk output: y_off = C_k . (decay_in * prev_state)
+    decay_in = jnp.exp(dA_cum)                               # [b,nc,Q,H]
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       Cc, decay_in, prev_states.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, S, H, P) + x * D[None, None, :, None]
+    if return_state:
+        return y.astype(x.dtype), final
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """O(1) recurrent update for one token.
+
+    state: [b, H, P, N]; x: [b, H, P]; dt: [b, H]; B, C: [b, N].
+    Returns (y [b, H, P], new_state).
+    """
+    dA = jnp.exp(dt * A[None, :])                            # [b, H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x, B)
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C) + x * D[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# Full Mamba2 mixer (projections + conv + SSD + gated norm)
+# --------------------------------------------------------------------------
+def _causal_conv(u, w, *, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. u: [B, S, Cd], w: [K, Cd]."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i : i + u.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, *,
+                   state: Optional[Tuple] = None, return_state: bool = False):
+    """x: [B, S, d] -> [B, S, d]. ``state``=(conv_state, ssm_state) for decode."""
+    s: SSMConfig = cfg.ssm
+    B_, S, d = x.shape
+    d_in = s.d_inner(d)
+    H = s.num_ssm_heads(d)
+    P = s.ssm_head_dim
+    N = s.state_size
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [d_in, d_in + (d_in + 2 * N)], axis=-1)
+    conv_state = None if state is None else state[0]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], state=conv_state)
+    xbc = jax.nn.silu(xbc + params["conv_b"][None, None, :])
+    xs, Bp, Cp = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])   # [B,S,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # [H] < 0
+    xh = xs.reshape(B_, S, H, P)
+
+    if state is None:
+        chunk = min(s.chunk_size, S)
+        while S % chunk:
+            chunk -= 1
+        y = ssd_chunked(xh, dt, A, Bp, Cp, params["D"], chunk=chunk)
+        new_ssm = None
+    else:
+        y, new_ssm = ssd_decode_step(state[1], xh[:, 0], dt[:, 0], A,
+                                     Bp[:, 0], Cp[:, 0], params["D"])
+        y = y[:, None]
+    y = y.reshape(B_, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state or state is not None:
+        return out, (new_conv, new_ssm)
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.num_ssm_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.state_size
+    conv = jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype)
+    ssm = jnp.zeros((batch, H, s.ssm_head_dim, s.state_size), jnp.float32)
+    return conv, ssm

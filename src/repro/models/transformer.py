@@ -1,0 +1,635 @@
+"""Generic transformer/MoE/SSM/hybrid model built from a ModelConfig.
+
+* ``model_plan`` declares every parameter (shape, logical axes, init kind);
+  init / abstract-shape / PartitionSpec trees are all derived from the one
+  plan, so sharding rules can never drift from the actual parameters.
+* Layers with the same (kind, mlp) signature are stacked along a leading
+  "layers" axis. The forward pass either unrolls (smoke/SL) or scans over
+  pattern repetitions (production; keeps HLO size O(pattern) not O(L)).
+* ``shared_attn`` blocks (Zamba2) hold ONE weight copy applied at every
+  occurrence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import ssm as ssm_mod
+from .attention import gqa_forward, mla_forward, apply_rope, multi_head_attention
+from .mlp import is_gated, mlp_forward
+from .moe import moe_forward
+from .norms import apply_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution options (how to run, not what the model is)."""
+    scan_layers: bool = False
+    moe_mode: str = "dense"          # dense | ep_a2a | ep_local
+    mesh: Any = None                 # jax Mesh (required for ep modes)
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    long_context: bool = False       # window-cache ALL attention (zamba2 500k)
+    force_blockwise: Optional[bool] = None
+    remat: bool = False              # activation checkpoint each block
+    # FSDP: params live sharded over data_axes (embed dim); gather each
+    # block's weights JUST BEFORE use via with_sharding_constraint so the
+    # SPMD partitioner all-gathers small weights instead of all-reducing
+    # full-batch activations.
+    fsdp_gather: bool = False
+    # Sequence-parallel attention: when a model's head count cannot shard
+    # over the model axis (e.g. gemma2's 8 q-heads on a 16-way axis),
+    # split QUERIES along the sequence over the model axis and gather K/V —
+    # attention FLOPs then divide by the model-axis size.
+    seq_parallel_attn: bool = False
+
+
+# ==========================================================================
+# Parameter plan
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | a_log | dt_bias
+
+
+def _norm_spec(cfg: ModelConfig) -> Dict[str, Spec]:
+    d = cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": Spec((d,), ("embed",), "zeros")}
+    return {"scale": Spec((d,), ("embed",), "ones"),
+            "bias": Spec((d,), ("embed",), "zeros")}
+
+
+def _attn_spec(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, H, KV, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": Spec((d, H, D), ("embed", "heads", None)),
+        "wk": Spec((d, KV, D), ("embed", "kv_heads", None)),
+        "wv": Spec((d, KV, D), ("embed", "kv_heads", None)),
+        "wo": Spec((H, D, d), ("heads", None, "embed")),
+    }
+    if cfg.use_qk_norm:
+        s["q_norm"] = Spec((D,), (None,), "zeros")
+        s["k_norm"] = Spec((D,), (None,), "zeros")
+    return s
+
+
+def _mla_spec(cfg: ModelConfig) -> Dict[str, Spec]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    return {
+        "wq_a": Spec((d, m.q_lora_rank), ("embed", None)),
+        "q_norm": Spec((m.q_lora_rank,), (None,), "zeros"),
+        "wq_b": Spec((m.q_lora_rank, H, m.qk_nope_head_dim + m.qk_rope_head_dim),
+                     (None, "heads", None)),
+        "wkv_a": Spec((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None)),
+        "kv_norm": Spec((m.kv_lora_rank,), (None,), "zeros"),
+        "wkv_b": Spec((m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim),
+                      (None, "heads", None)),
+        "wo": Spec((H, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+
+
+def _mlp_spec(cfg: ModelConfig, kind: str) -> Dict[str, Spec]:
+    d, f = cfg.d_model, cfg.d_ff
+    if kind == "moe":
+        mo = cfg.moe
+        s = {
+            "router": Spec((d, mo.num_experts), ("embed", None)),
+            # expert weights get their OWN logical axes so FSDP sharding of
+            # experts can be toggled independently (perf iteration knob)
+            "wi": Spec((mo.num_experts, d, 2, mo.expert_d_ff),
+                       ("expert", "moe_embed", None, "moe_mlp")),
+            "wo": Spec((mo.num_experts, mo.expert_d_ff, d),
+                       ("expert", "moe_mlp", "moe_embed")),
+        }
+        if mo.num_shared_experts:
+            sf = mo.expert_d_ff * mo.num_shared_experts
+            s["shared"] = {"wi": Spec((d, 2, sf), ("embed", None, "mlp")),
+                           "wo": Spec((sf, d), ("mlp", "embed"))}
+        return s
+    if is_gated(kind):
+        return {"wi": Spec((d, 2, f), ("embed", None, "mlp")),
+                "wo": Spec((f, d), ("mlp", "embed"))}
+    return {"wi": Spec((d, f), ("embed", "mlp")),
+            "wo": Spec((f, d), ("mlp", "embed"))}
+
+
+def _mamba_spec(cfg: ModelConfig) -> Dict[str, Spec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    H = s.num_ssm_heads(d)
+    conv_dim = d_in + 2 * s.state_size
+    proj_out = 2 * d_in + 2 * s.state_size + H
+    return {
+        "in_proj": Spec((d, proj_out), ("embed", "mlp")),
+        "conv_w": Spec((s.conv_kernel, conv_dim), (None, "mlp")),
+        "conv_b": Spec((conv_dim,), ("mlp",), "zeros"),
+        "dt_bias": Spec((H,), (None,), "dt_bias"),
+        "A_log": Spec((H,), (None,), "a_log"),
+        "D": Spec((H,), (None,), "ones"),
+        "norm": Spec((d_in,), ("mlp",), "zeros"),
+        "out_proj": Spec((d_in, d), ("mlp", "embed")),
+    }
+
+
+def block_plan(cfg: ModelConfig, kind: str, mlp_kind: str) -> Dict[str, Any]:
+    if kind == "mamba":
+        return {"ln1": _norm_spec(cfg), "mamba": _mamba_spec(cfg)}
+    mixer = _mla_spec(cfg) if kind == "mla" else _attn_spec(cfg)
+    plan = {"ln1": _norm_spec(cfg), "attn": mixer,
+            "ln2": _norm_spec(cfg), "mlp": _mlp_spec(cfg, mlp_kind)}
+    if cfg.use_post_norm:
+        plan["ln1_post"] = _norm_spec(cfg)
+        plan["ln2_post"] = _norm_spec(cfg)
+    return plan
+
+
+def layer_table(cfg: ModelConfig) -> List[Tuple[str, str, str, int]]:
+    """Per layer: (kind, mlp_kind, group_key, index_within_group)."""
+    counters: Dict[str, int] = {}
+    table = []
+    for idx, kind in enumerate(cfg.layer_kinds):
+        mlp_kind = "-" if kind == "mamba" else cfg.mlp_kind_for_layer(idx)
+        key = "shared" if kind == "shared_attn" else f"{kind}:{mlp_kind}"
+        pos = 0 if key == "shared" else counters.get(key, 0)
+        if key != "shared":
+            counters[key] = pos + 1
+        table.append((kind, mlp_kind, key, pos))
+    return table
+
+
+def group_counts(cfg: ModelConfig) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for kind, mlp_kind, key, pos in layer_table(cfg):
+        if key == "shared":
+            counts[key] = 1
+        else:
+            counts[key] = max(counts.get(key, 0), pos + 1)
+    return counts
+
+
+def _stack(plan: Dict[str, Any], n: int) -> Dict[str, Any]:
+    def f(leaf: Spec) -> Spec:
+        return Spec((n,) + leaf.shape, ("layers",) + leaf.axes, leaf.init)
+    return jax.tree.map(f, plan, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def model_plan(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    plan: Dict[str, Any] = {
+        "embed": Spec((cfg.vocab_size, d), ("vocab", "embed")),
+        "final_norm": _norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        plan["lm_head"] = Spec((d, cfg.vocab_size), ("embed", "vocab"))
+    groups: Dict[str, Any] = {}
+    table = layer_table(cfg)
+    for key, n in group_counts(cfg).items():
+        kind, mlp_kind = next((k, m) for k, m, kk, _ in table if kk == key)
+        bp = block_plan(cfg, kind, mlp_kind)
+        groups[key] = bp if key == "shared" else _stack(bp, n)
+    plan["groups"] = groups
+    if cfg.mtp_depth > 0:
+        kind, mlp_kind = table[-1][0], table[-1][1]
+        plan["mtp"] = {
+            "proj": Spec((2 * d, d), (None, "embed")),
+            "norm_h": _norm_spec(cfg),
+            "norm_e": _norm_spec(cfg),
+            "block": block_plan(cfg, kind, mlp_kind),
+        }
+    return plan
+
+
+# ---- plan materialization -------------------------------------------------
+def _init_leaf(spec: Spec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "a_log":
+        base = jnp.log(jnp.linspace(1.0, 16.0, spec.shape[-1], dtype=jnp.float32))
+        return jnp.broadcast_to(base, spec.shape).astype(jnp.float32)
+    if spec.init == "dt_bias":
+        return jnp.zeros(spec.shape, jnp.float32)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = 0.02 if spec.init == "normal" else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    plan = model_plan(cfg)
+    leaves, treedef = jax.tree.flatten(plan, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    def f(s: Spec):
+        dt = jnp.float32 if s.init in ("a_log", "dt_bias") else dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return jax.tree.map(f, model_plan(cfg), is_leaf=lambda x: isinstance(x, Spec))
+
+
+def param_pspecs(cfg: ModelConfig, rules: Dict[str, Any]):
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+    from jax.sharding import PartitionSpec as P
+
+    def f(s: Spec):
+        return P(*[rules.get(a) if a else None for a in s.axes])
+    return jax.tree.map(f, model_plan(cfg), is_leaf=lambda x: isinstance(x, Spec))
+
+
+# "compute" sharding of weights: tensor-parallel dims stay sharded, the FSDP
+# (embed) dim is gathered at use
+GATHER_RULES = {"vocab": "model", "embed": None, "heads": "model",
+                "kv_heads": "model", "mlp": "model", "expert": "model",
+                "moe_embed": None, "moe_mlp": None, "layers": None}
+
+
+@functools.lru_cache(maxsize=64)
+def gather_shardings(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    """Per-group NamedSharding trees for SLICED (per-layer) block params,
+    plus entries for 'embed'/'lm_head'/'final_norm'/'mtp'."""
+    from jax.sharding import NamedSharding
+    from repro.launch.mesh import auto_pspec
+
+    def leaf(s: Spec, drop_layers: bool):
+        axes = s.axes[1:] if (drop_layers and s.axes and s.axes[0] == "layers") \
+            else s.axes
+        shape = s.shape[1:] if (drop_layers and s.axes
+                                and s.axes[0] == "layers") else s.shape
+        wanted = [GATHER_RULES.get(a) if a else None for a in axes]
+        return NamedSharding(mesh, auto_pspec(shape, wanted, mesh))
+
+    plan = model_plan(cfg)
+    out: Dict[str, Any] = {}
+    for key, sub in plan["groups"].items():
+        out[key] = jax.tree.map(lambda s: leaf(s, key != "shared"), sub,
+                                is_leaf=lambda x: isinstance(x, Spec))
+    for key in ("embed", "lm_head", "final_norm", "mtp"):
+        if key in plan:
+            out[key] = jax.tree.map(lambda s: leaf(s, False), plan[key],
+                                    is_leaf=lambda x: isinstance(x, Spec))
+    return out
+
+
+def _maybe_gather(cfg: ModelConfig, rt: Runtime, key: str, tree):
+    if not rt.fsdp_gather or rt.mesh is None:
+        return tree
+    return jax.lax.with_sharding_constraint(tree,
+                                            gather_shardings(cfg, rt.mesh)[key])
+
+
+# ==========================================================================
+# Forward
+# ==========================================================================
+def _window_for(cfg: ModelConfig, kind: str, rt: Runtime) -> Optional[int]:
+    if kind == "local":
+        return cfg.sliding_window
+    if rt.long_context and kind in ("attn", "shared_attn"):
+        return cfg.sliding_window  # documented long_500k adaptation
+    return None
+
+
+def block_forward(cfg: ModelConfig, kind: str, mlp_kind: str, bp, x, positions,
+                  rt: Runtime, cache=None, decode_pos=None):
+    """One block. Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(x, bp["ln1"], cfg.norm)
+    new_cache = cache
+    if kind == "mamba":
+        if cache is not None:
+            out, new_cache = ssm_mod.mamba2_forward(bp["mamba"], h, cfg, state=cache)
+        else:
+            out = ssm_mod.mamba2_forward(bp["mamba"], h, cfg)
+        if cfg.use_post_norm:
+            out = apply_norm(out, bp.get("ln1_post", bp["ln1"]), cfg.norm)
+        return x + out, aux, new_cache
+
+    window = _window_for(cfg, kind, rt)
+    if kind == "mla":
+        if cache is not None:
+            def override(ckv, kr):
+                c2 = jax.lax.dynamic_update_slice(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, decode_pos, 0))
+                k2 = jax.lax.dynamic_update_slice(
+                    cache["kr"], kr.astype(cache["kr"].dtype), (0, decode_pos, 0))
+                new_c = {"ckv": c2, "kr": k2}
+                k_pos = jnp.broadcast_to(jnp.arange(c2.shape[1])[None],
+                                         (c2.shape[0], c2.shape[1]))
+                return c2, k2, k_pos, new_c
+            box = {}
+            def ov(ckv, kr):
+                c2, k2, kp, nc = override(ckv, kr)
+                box["cache"] = nc
+                return c2, k2, kp
+            out = mla_forward(bp["attn"], h, positions, cfg, cache_override=ov)
+            new_cache = box["cache"]
+        else:
+            out = mla_forward(bp["attn"], h, positions, cfg)
+    else:
+        if cache is not None:
+            W = cache["k"].shape[1]
+            slot = decode_pos % W if W < 10 ** 9 else decode_pos
+            box = {}
+            def kv_override(k, v):
+                k2 = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                v2 = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                kp = jax.lax.dynamic_update_slice(
+                    cache["pos"], jnp.broadcast_to(
+                        decode_pos, (k.shape[0], 1)).astype(cache["pos"].dtype),
+                    (0, slot))
+                box["cache"] = {"k": k2, "v": v2, "pos": kp}
+                return k2, v2, kp
+            out = gqa_forward(bp["attn"], h, positions, cfg, window=window,
+                              kv_override=kv_override)
+            new_cache = box["cache"]
+        else:
+            sp = ((rt.mesh, rt.data_axes, rt.model_axis)
+                  if rt.seq_parallel_attn and rt.mesh is not None else None)
+            out = gqa_forward(bp["attn"], h, positions, cfg, window=window,
+                              seq_parallel=sp)
+    if cfg.use_post_norm:
+        out = apply_norm(out, bp["ln1_post"], cfg.norm)
+    x = x + out
+
+    h = apply_norm(x, bp["ln2"], cfg.norm)
+    if mlp_kind == "moe":
+        out, aux = moe_forward(bp["mlp"], h, cfg, mode=rt.moe_mode,
+                               mesh=rt.mesh, data_axes=rt.data_axes,
+                               model_axis=rt.model_axis)
+    else:
+        out = mlp_forward(bp["mlp"], h, mlp_kind)
+    if cfg.use_post_norm:
+        out = apply_norm(out, bp["ln2_post"], cfg.norm)
+    return x + out, aux, new_cache
+
+
+def _embed(cfg: ModelConfig, params, tokens, rt: Optional[Runtime] = None):
+    emb = params["embed"]
+    if rt is not None:
+        emb = _maybe_gather(cfg, rt, "embed", emb)
+    e = emb[tokens]
+    return e * jnp.asarray(np.sqrt(cfg.d_model), e.dtype)
+
+
+def _unembed(cfg: ModelConfig, params, h, rt: Optional[Runtime] = None):
+    if cfg.tie_embeddings:
+        emb = params["embed"]
+        if rt is not None:
+            emb = _maybe_gather(cfg, rt, "embed", emb)
+        logits = jnp.einsum("bsd,vd->bsv", h, emb)
+    else:
+        head = params["lm_head"]
+        if rt is not None:
+            head = _maybe_gather(cfg, rt, "lm_head", head)
+        logits = jnp.einsum("bsd,dv->bsv", h, head)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def forward_hidden(cfg: ModelConfig, params, x, positions, rt: Runtime,
+                   caches=None, decode_pos=None):
+    """Run all blocks. x: [B, S, d] embeddings. Returns (h, aux, new_caches)."""
+    table = layer_table(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = None if caches is None else list(caches)
+
+    blk = functools.partial(block_forward, cfg)
+    if rt.remat:
+        # kind, mlp_kind, rt are static; bp/x/positions/cache are arrays
+        blk = jax.checkpoint(blk, static_argnums=(0, 1, 5))
+
+    if not rt.scan_layers or caches is not None:
+        # unrolled path (smoke, SL, decode)
+        for li, (kind, mlp_kind, key, pos) in enumerate(table):
+            bp = params["groups"][key]
+            if key != "shared":
+                bp = jax.tree.map(lambda a: a[pos], bp)
+            bp = _maybe_gather(cfg, rt, key, bp)
+            cache = None if caches is None else caches[li]
+            x, aux, nc = blk(kind, mlp_kind, bp, x, positions, rt,
+                             cache, decode_pos)
+            aux_total = aux_total + aux
+            if caches is not None:
+                new_caches[li] = nc
+        return x, aux_total, new_caches
+
+    # scanned path: repetitions of the block pattern
+    P = len(cfg.block_pattern)
+    R = cfg.num_layers // P
+    occ = {}  # per-group occurrences per repetition
+    for kind in cfg.block_pattern:
+        mlp_kind = "-" if kind == "mamba" else cfg.mlp_kind  # pattern-level
+        key = "shared" if kind == "shared_attn" else f"{kind}:{mlp_kind}"
+        occ[key] = occ.get(key, 0) + 1
+
+    # deepseek first_k_dense layers are a DIFFERENT group -> run them
+    # unrolled first, then scan the homogeneous tail.
+    lead = cfg.first_k_dense
+    for li in range(lead):
+        kind, mlp_kind, key, pos = table[li]
+        bp = jax.tree.map(lambda a: a[pos], params["groups"][key])
+        bp = _maybe_gather(cfg, rt, key, bp)
+        x, aux, _ = blk(kind, mlp_kind, bp, x, positions, rt, None, None)
+        aux_total = aux_total + aux
+    # recompute repetition count for the scanned tail
+    tail_layers = cfg.num_layers - lead
+    R = tail_layers // P
+    rem = tail_layers - R * P
+
+    scan_tree = {}
+    for key, o in occ.items():
+        if key == "shared":
+            continue
+        stack = params["groups"][key]
+        # occurrences of this group inside the scanned region
+        def take(a, o=o):
+            lead_in_group = sum(1 for t in table[:lead] if t[2] == key)
+            sl = a[lead_in_group: lead_in_group + R * o]
+            return sl.reshape((R, o) + sl.shape[1:])
+        scan_tree[key] = jax.tree.map(take, stack)
+
+    pattern = []
+    cnt: Dict[str, int] = {}
+    for kind in cfg.block_pattern:
+        mlp_kind = "-" if kind == "mamba" else cfg.mlp_kind
+        key = "shared" if kind == "shared_attn" else f"{kind}:{mlp_kind}"
+        pattern.append((kind, mlp_kind, key, cnt.get(key, 0)))
+        cnt[key] = cnt.get(key, 0) + 1
+
+    shared_bp = params["groups"].get("shared")
+    if shared_bp is not None:
+        shared_bp = _maybe_gather(cfg, rt, "shared", shared_bp)
+
+    def body(carry, sl):
+        xx, aux_acc = carry
+        for kind, mlp_kind, key, o in pattern:
+            if key == "shared":
+                bp = shared_bp  # gathered once outside the scan
+            else:
+                bp = jax.tree.map(lambda a, o=o: a[o], sl[key])
+                bp = _maybe_gather(cfg, rt, key, bp)
+            xx, aux, _ = blk(kind, mlp_kind, bp, xx, positions, rt, None, None)
+            aux_acc = aux_acc + aux
+        return (xx, aux_acc), None
+
+    if R > 0:
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), scan_tree)
+
+    # remainder layers (pattern does not divide num_layers)
+    for li in range(cfg.num_layers - rem, cfg.num_layers):
+        kind, mlp_kind, key, pos = table[li]
+        bp = (shared_bp if key == "shared"
+              else jax.tree.map(lambda a: a[pos], params["groups"][key]))
+        bp = _maybe_gather(cfg, rt, key, bp)
+        x, aux, _ = blk(kind, mlp_kind, bp, x, positions, rt, None, None)
+        aux_total = aux_total + aux
+    return x, aux_total, None
+
+
+def _embed_batch(cfg: ModelConfig, params, batch, rt: Optional[Runtime] = None):
+    if cfg.frontend == "audio":
+        return batch["frames"]
+    x = _embed(cfg, params, batch["tokens"], rt)
+    if cfg.frontend == "vision":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            rt: Runtime, *, return_hidden: bool = False):
+    """Full forward -> (logits [B,S,V], aux). Handles modality stubs."""
+    x = _embed_batch(cfg, params, batch, rt)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, aux, _ = forward_hidden(cfg, params, x, positions, rt)
+    hn = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = _unembed(cfg, params, hn, rt)
+    if return_hidden:
+        return logits, aux, h, x, positions
+    return logits, aux
+
+
+def cross_entropy(logits, labels, mask=None):
+    """CE via a one-hot contraction rather than take_along_axis: under SPMD
+    the gather over a vocab-sharded axis forces a batch-unsharded reshard,
+    while the one-hot product reduces locally per vocab shard."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    ll = label_logit - lse
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, rt: Runtime):
+    """Training loss. LM: next-token CE (+MoE aux, +MTP). Encoder: frame CE."""
+    logits, aux, h, x, positions = forward(cfg, params, batch, rt,
+                                           return_hidden=True)
+    if cfg.frontend == "audio":
+        loss = cross_entropy(logits, batch["labels"])
+    else:
+        S_text = batch["tokens"].shape[1]
+        text_logits = logits[:, -S_text:]
+        loss = cross_entropy(text_logits[:, :-1], batch["tokens"][:, 1:])
+    total = loss + (cfg.moe.router_aux_coef * aux if cfg.moe else 0.0)
+
+    if cfg.mtp_depth > 0 and "tokens" in batch:
+        total = total + 0.3 * _mtp_loss(cfg, params, batch, rt, h, x, positions)
+    return total, {"ce": loss, "aux": aux}
+
+
+def _mtp_loss(cfg: ModelConfig, params, batch, rt: Runtime, h, x, positions):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from the
+    backbone hidden at t combined with the embedding of token t+1. Reuses
+    the main forward's hidden states (one extra block, not a second pass)."""
+    tokens = batch["tokens"]
+    mp = params["mtp"]
+    # keep the FULL sequence length (sharding divisibility); shift by rolling
+    # and mask the wrapped tail out of the loss
+    x_next = jnp.roll(x, -1, axis=1)
+    h_n = apply_norm(h, mp["norm_h"], cfg.norm)
+    e_n = apply_norm(x_next, mp["norm_e"], cfg.norm)
+    hin = jnp.einsum("bsk,kd->bsd", jnp.concatenate([h_n, e_n], -1), mp["proj"])
+    kind, mlp_kind = layer_table(cfg)[-1][0], layer_table(cfg)[-1][1]
+    hout, _, _ = block_forward(cfg, kind, mlp_kind, mp["block"], hin,
+                               positions, rt)
+    logits = _unembed(cfg, params, apply_norm(hout, params["final_norm"],
+                                              cfg.norm), rt)
+    S = tokens.shape[1]
+    labels = jnp.roll(tokens, -2, axis=1)
+    mask = (jnp.arange(S) < S - 2)[None, :].astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, tokens.shape)
+    return cross_entropy(logits, labels, mask)
+
+
+# ==========================================================================
+# Decode caches + serve step
+# ==========================================================================
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, rt: Runtime,
+                dtype=jnp.bfloat16, abstract: bool = False):
+    """Per-layer cache list (python list indexed by layer)."""
+    KV, D = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def make(shape, dt):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    caches = []
+    for kind, mlp_kind, key, pos in layer_table(cfg):
+        if kind == "mamba":
+            s = cfg.ssm
+            d_in = s.d_inner(cfg.d_model)
+            conv_dim = d_in + 2 * s.state_size
+            caches.append((make((batch, s.conv_kernel - 1, conv_dim), dtype),
+                           make((batch, s.num_ssm_heads(cfg.d_model),
+                                 s.ssm_head_dim, s.state_size), jnp.float32)))
+        elif kind == "mla":
+            m = cfg.mla
+            caches.append({
+                "ckv": make((batch, max_len, m.kv_lora_rank), dtype),
+                "kr": make((batch, max_len, m.qk_rope_head_dim), dtype)})
+        else:
+            windowed = (kind == "local") or (rt.long_context
+                                             and kind in ("attn", "shared_attn"))
+            W = min(cfg.sliding_window, max_len) if windowed else max_len
+            # "pos" starts at FUTURE (2**30) so unfilled slots are excluded by
+            # the causal mask (q_pos - 2**30 < 0)
+            caches.append({
+                "k": make((batch, W, KV, D), dtype),
+                "v": make((batch, W, KV, D), dtype),
+                "pos": make((batch, W), jnp.int32) if abstract
+                else jnp.full((batch, W), 2 ** 30, jnp.int32)})
+    return caches
+
+
+def serve_step(cfg: ModelConfig, params, caches, tokens, pos, rt: Runtime):
+    """Decode ONE token. tokens: [B, 1]; pos: scalar int32 (current index).
+    Returns (logits [B, 1, V], new_caches)."""
+    B = tokens.shape[0]
+    x = _embed(cfg, params, tokens, rt)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    h, _, new_caches = forward_hidden(cfg, params, x, positions, rt,
+                                      caches=caches, decode_pos=pos)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    return _unembed(cfg, params, h, rt), new_caches

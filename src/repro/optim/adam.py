@@ -1,0 +1,109 @@
+"""Pure-JAX optimizers: Adam(W) and SGD+momentum, with grad clipping and
+cosine/linear-warmup schedules. No external deps (optax is not available
+offline)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamState, params):
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(lambda mu, g: self.b1 * mu + (1 - self.b1)
+                         * g.astype(jnp.float32), state.m, grads)
+        v = jax.tree.map(lambda nu, g: self.b2 * nu + (1 - self.b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+        lr = self._lr(step)
+
+        def upd(p, mu, nu):
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamState(step, m, v)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: Optional[float] = None
+
+    def init(self, params) -> SGDState:
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                     params))
+
+    def update(self, grads, state: SGDState, params):
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        mom = jax.tree.map(lambda b, g: self.momentum * b + g.astype(jnp.float32),
+                           state.momentum, grads)
+        new_params = jax.tree.map(
+            lambda p, b: (p.astype(jnp.float32) - lr * b).astype(p.dtype),
+            params, mom)
+        return new_params, SGDState(step, mom)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

@@ -1,0 +1,221 @@
+"""Analytic per-layer cost model for every supported architecture.
+
+Produces, for any (ModelConfig, cut layers, batch, seq, device, link):
+  * FLOPs of part-1 / part-2 / part-3 (fwd; bwd = 2x fwd),
+  * bytes crossing each cut (activations fwd, gradients bwd),
+  * helper-side memory demand d_j (part-2 params + optimizer + activations),
+and quantizes them into the paper's integer slot delays
+``r, p, l, l', p', r'`` (Sec. III, Fig. 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from .devices import Device
+
+BYTES_PER_ACT = 2  # bf16 activations on the wire and in compute
+
+
+# --------------------------------------------------------------------------
+# Parameter counts
+# --------------------------------------------------------------------------
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    from repro.models.transformer import Spec, model_plan
+    import jax
+
+    total = 0
+    expert_extra = 0
+    plan = model_plan(cfg)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            plan, is_leaf=lambda x: isinstance(x, Spec))[0]:
+        size = int(np.prod(leaf.shape))
+        total += size
+        keys = [getattr(p, "key", "") for p in path]
+        if "expert" in (leaf.axes or ()) and "wi" in keys or (
+                "expert" in (leaf.axes or ()) and "wo" in keys):
+            expert_extra += size
+    if active_only and cfg.moe is not None:
+        frac = 1.0 - cfg.moe.experts_per_token / cfg.moe.num_experts
+        total -= int(expert_extra * frac)
+    return total
+
+
+# --------------------------------------------------------------------------
+# Per-layer forward FLOPs
+# --------------------------------------------------------------------------
+def _attn_flops(cfg: ModelConfig, B: int, S: int, window: Optional[int]) -> float:
+    d, H, KV, D = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    proj = 2.0 * B * S * d * (H * D + 2 * KV * D) + 2.0 * B * S * H * D * d
+    Sk = min(S, window) if window else S
+    causal_factor = 0.5 if (cfg.causal and not window) else 1.0
+    attn = 2.0 * 2.0 * B * S * Sk * H * D * causal_factor
+    return proj + attn
+
+
+def _mla_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    dqk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    proj = 2.0 * B * S * (
+        d * m.q_lora_rank + m.q_lora_rank * H * dqk
+        + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        + m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
+        + H * m.v_head_dim * d)
+    attn = 2.0 * B * S * S * H * (dqk + m.v_head_dim) * 0.5
+    return proj + attn
+
+
+def _mlp_flops(cfg: ModelConfig, B: int, S: int, kind: str) -> float:
+    d = cfg.d_model
+    if kind == "moe":
+        mo = cfg.moe
+        router = 2.0 * B * S * d * mo.num_experts
+        per_tok = 2.0 * d * mo.expert_d_ff * 3 * mo.experts_per_token
+        shared = 2.0 * d * mo.expert_d_ff * mo.num_shared_experts * 3
+        return router + B * S * (per_tok + shared)
+    mult = 3 if kind in ("swiglu", "geglu") else 2
+    return 2.0 * B * S * d * cfg.d_ff * mult
+
+
+def _mamba_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    H, P, N = s.num_ssm_heads(d), s.ssm_head_dim, s.state_size
+    conv_dim = d_in + 2 * N
+    proj = 2.0 * B * S * d * (2 * d_in + 2 * N + H) + 2.0 * B * S * d_in * d
+    conv = 2.0 * B * S * conv_dim * s.conv_kernel
+    Q = s.chunk_size
+    ssd = B * S * (2.0 * Q * N + 2.0 * Q * H * P + 4.0 * H * P * N)
+    return proj + conv + ssd
+
+
+def layer_fwd_flops(cfg: ModelConfig, idx: int, B: int, S: int) -> float:
+    kind = cfg.layer_kinds[idx]
+    mlp_kind = cfg.mlp_kind_for_layer(idx)
+    if kind == "mamba":
+        return _mamba_flops(cfg, B, S)
+    if kind == "mla":
+        mix = _mla_flops(cfg, B, S)
+    else:
+        window = cfg.sliding_window if kind == "local" else None
+        mix = _attn_flops(cfg, B, S, window)
+    return mix + _mlp_flops(cfg, B, S, mlp_kind)
+
+
+def embed_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    return 2.0 * B * S * cfg.d_model * cfg.vocab_size  # unembed matmul
+
+
+def model_fwd_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    return sum(layer_fwd_flops(cfg, i, B, S)
+               for i in range(cfg.num_layers)) + embed_flops(cfg, B, S)
+
+
+def model_flops_6nd(cfg: ModelConfig, B: int, S: int) -> float:
+    """MODEL_FLOPS = 6 N D (N = active params, D = tokens) for roofline."""
+    return 6.0 * count_params(cfg, active_only=True) * B * S
+
+
+# --------------------------------------------------------------------------
+# Split costs (part-1 | part-2 | part-3)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SplitCosts:
+    fwd_flops: Tuple[float, float, float]  # part-1, part-2, part-3
+    cut1_bytes: float   # activations/gradients crossing sigma_1
+    cut2_bytes: float   # activations/gradients crossing sigma_2
+    part2_param_bytes: float
+    part2_act_bytes: float
+
+
+def layer_params(cfg: ModelConfig, idx: int) -> int:
+    """Approximate per-layer parameter count (for memory demand d_j)."""
+    kind = cfg.layer_kinds[idx]
+    mlp_kind = cfg.mlp_kind_for_layer(idx)
+    d = cfg.d_model
+    if kind == "mamba":
+        s = cfg.ssm
+        d_in = s.d_inner(d)
+        return d * (2 * d_in + 2 * s.state_size + s.num_ssm_heads(d)) + d_in * d
+    if kind == "mla":
+        m = cfg.mla
+        H = cfg.num_heads
+        mix = (d * m.q_lora_rank
+               + m.q_lora_rank * H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+               + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+               + m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
+               + H * m.v_head_dim * d)
+    else:
+        H, KV, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        mix = d * (H * D + 2 * KV * D) + H * D * d
+    if mlp_kind == "moe":
+        mo = cfg.moe
+        mlp = d * mo.num_experts + mo.num_experts * d * mo.expert_d_ff * 3 \
+            + mo.num_shared_experts * d * mo.expert_d_ff * 3
+    else:
+        mult = 3 if mlp_kind in ("swiglu", "geglu") else 2
+        mlp = d * cfg.d_ff * mult
+    return int(mix + mlp)
+
+
+def split_costs(cfg: ModelConfig, B: int, S: int,
+                cut: Optional[Tuple[int, int]] = None) -> SplitCosts:
+    s1, s2 = cut if cut is not None else cfg.sl_cuts_resolved
+    assert 0 <= s1 <= s2 <= cfg.num_layers
+    per_layer = [layer_fwd_flops(cfg, i, B, S) for i in range(cfg.num_layers)]
+    f1 = sum(per_layer[:s1])
+    f2 = sum(per_layer[s1:s2])
+    f3 = sum(per_layer[s2:]) + embed_flops(cfg, B, S)
+    cut_bytes = float(B * S * cfg.d_model * BYTES_PER_ACT)
+    p2_params = sum(layer_params(cfg, i) for i in range(s1, s2))
+    # stored activations in part-2 (per layer ~4x the residual stream, bf16)
+    p2_acts = float((s2 - s1) * B * S * cfg.d_model * 4 * BYTES_PER_ACT)
+    return SplitCosts(
+        fwd_flops=(f1, f2, f3),
+        cut1_bytes=cut_bytes,
+        cut2_bytes=cut_bytes,
+        part2_param_bytes=float(p2_params) * 4,  # fp32 master copy
+        part2_act_bytes=p2_acts,
+    )
+
+
+# --------------------------------------------------------------------------
+# Delay synthesis (the paper's r, p, l, l', p', r')
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EdgeDelays:
+    r: int
+    p: int
+    l: int
+    lp: int
+    pp: int
+    rp: int
+
+
+def edge_delays(costs: SplitCosts, client: Device, helper: Device,
+                up_Bps: float, down_Bps: float, slot_s: float,
+                *, bwd_mult: float = 2.0) -> EdgeDelays:
+    f1, f2, f3 = costs.fwd_flops
+
+    def slots(t, minimum=0):
+        return max(int(np.ceil(t / slot_s)), minimum)
+
+    r = slots(f1 / client.flops + costs.cut1_bytes / up_Bps)
+    p = slots(f2 / helper.flops, 1)
+    l = slots(costs.cut2_bytes / down_Bps + f3 / client.flops)
+    lp = slots(bwd_mult * f3 / client.flops + costs.cut2_bytes / up_Bps)
+    pp = slots(bwd_mult * f2 / helper.flops, 1)
+    rp = slots(costs.cut1_bytes / down_Bps + bwd_mult * f1 / client.flops)
+    return EdgeDelays(r=r, p=p, l=l, lp=lp, pp=pp, rp=rp)
+
+
+def helper_memory_demand_gb(costs: SplitCosts) -> float:
+    """d_j: part-2 master params + Adam m,v + stored activations (GB)."""
+    opt = costs.part2_param_bytes * 3  # fp32 params + m + v
+    return (opt + costs.part2_act_bytes) / 1e9

@@ -1,0 +1,104 @@
+"""Per-layer profiles of the paper's testbed models (ResNet101, VGG19 on
+CIFAR-10, batch 128).
+
+The paper treats a model as a sequence of indivisible "layers" (37 for
+ResNet101, 25 for VGG19) and profiles per-layer compute on each device.
+We reconstruct per-layer compute FRACTIONS and cut activation sizes from the
+architectures themselves (channel/spatial dims on 32x32 inputs); per-device
+absolute times are anchored to the measured Table I batch times, so e.g.
+RPi4 ResNet101 per-batch time sums to 91.9 s by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .devices import Device
+
+
+@dataclasses.dataclass(frozen=True)
+class TestbedModel:
+    name: str
+    num_layers: int
+    flop_frac: np.ndarray      # [L] fractions summing to 1
+    act_bytes: np.ndarray      # [L+1] activation bytes at each cut point
+    param_bytes: np.ndarray    # [L] parameter bytes per layer
+    default_cut: tuple         # paper Scenario 1 cut layers
+
+    def batch_time(self, device: Device, model_times: dict) -> float:
+        t = model_times.get(self.name)
+        if t is None:  # no measurement: scale from a reference device
+            return None
+        return t
+
+
+def _resnet101_profile(batch: int = 128) -> TestbedModel:
+    # CIFAR-10 ResNet101: stem + [3, 4, 23, 3] bottleneck blocks + head = 34
+    # blocks; the paper counts 37 indivisible layers (stem, 34 blocks, pool,
+    # fc). Spatial 32->32->16->8->4.
+    chans = [64] + [256] * 3 + [512] * 4 + [1024] * 23 + [2048] * 3 + [2048, 10]
+    spatial = [32] + [32] * 3 + [16] * 4 + [8] * 23 + [4] * 3 + [1, 1]
+    L = len(chans)  # 37
+    flops = []
+    params = []
+    for i in range(L):
+        c, s = chans[i], spatial[i]
+        c_in = chans[i - 1] if i else 3
+        if i in (L - 2, L - 1):  # pool + fc
+            f = c_in * c * 2.0
+            p = c_in * c
+        else:
+            f = 2.0 * (c_in * c // 4 + (c // 4) ** 2 * 9 + (c // 4) * c) * s * s
+            p = c_in * c // 4 + (c // 4) ** 2 * 9 + (c // 4) * c
+        flops.append(f * batch)
+        params.append(p * 4)
+    flops = np.array(flops)
+    acts = np.array([batch * chans[min(i, L - 1)] * spatial[min(i, L - 1)] ** 2 * 4
+                     for i in range(L + 1)], dtype=float)
+    acts[0] = batch * 3 * 32 * 32 * 4
+    return TestbedModel("resnet101", L, flops / flops.sum(), acts,
+                        np.array(params, float), default_cut=(3, 33))
+
+
+def _vgg19_profile(batch: int = 128) -> TestbedModel:
+    # VGG19: 16 conv + 5 pool-ish markers + 3 fc -> paper counts 25 layers
+    conv_ch = [64, 64, 128, 128, 256, 256, 256, 256,
+               512, 512, 512, 512, 512, 512, 512, 512]
+    pool_after = {1, 3, 7, 11, 15}
+    spatial = 32
+    layers = []
+    c_in = 3
+    for i, c in enumerate(conv_ch):
+        layers.append(("conv", c_in, c, spatial))
+        c_in = c
+        if i in pool_after:
+            layers.append(("pool", c, c, spatial))
+            spatial //= 2
+    layers += [("fc", 512, 512, 1), ("fc", 512, 512, 1), ("fc", 512, 10, 1)]
+    L = len(layers)  # 24 (+input marker ~ paper's 25)
+    flops, params, acts = [], [], []
+    for kind, ci, co, s in layers:
+        if kind == "conv":
+            f = 2.0 * ci * co * 9 * s * s
+            p = ci * co * 9
+        elif kind == "pool":
+            f = co * s * s * 1.0
+            p = 0
+        else:
+            f = 2.0 * ci * co
+            p = ci * co
+        flops.append(f * batch)
+        params.append(p * 4)
+        acts.append(batch * co * s * s * 4)
+    flops = np.array(flops)
+    acts = np.array([batch * 3 * 32 * 32 * 4] + acts, dtype=float)
+    return TestbedModel("vgg19", L, flops / flops.sum(), acts,
+                        np.array(params, float), default_cut=(3, 23))
+
+
+RESNET101 = _resnet101_profile()
+VGG19 = _vgg19_profile()
+TESTBED_MODELS = {"resnet101": RESNET101, "vgg19": VGG19}

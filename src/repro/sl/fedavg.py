@@ -1,0 +1,27 @@
+"""FedAvg aggregation (McMahan et al.) over part trees."""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fedavg(trees: Sequence, weights: Optional[Sequence[float]] = None):
+    """Weighted average of identical pytrees."""
+    n = len(trees)
+    if weights is None:
+        w = [1.0 / n] * n
+    else:
+        tot = float(sum(weights))
+        w = [float(x) / tot for x in weights]
+
+    def avg(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)

@@ -1,0 +1,59 @@
+"""Beyond-paper extensions: cut-layer co-optimization + batch pipelining."""
+
+import numpy as np
+import pytest
+
+from repro.core import (check_feasible, schedule_pipelined, search_cuts,
+                        solve_balanced_greedy)
+from repro.core.balanced_greedy import assign_balanced
+from repro.core.cut_search import candidate_cuts
+from repro.profiling.scenarios import cnn_instance, instance_builder_for
+from repro.profiling.testbed_models import TESTBED_MODELS
+
+
+def test_candidate_cuts_keep_part2_dominant():
+    for L in (25, 37, 61):
+        for s1, s2 in candidate_cuts(L):
+            assert 0 <= s1 < s2 <= L
+            assert (s2 - s1) >= L // 2
+
+
+def test_cut_search_improves_fixed_cut():
+    model = "resnet101"
+    J, I = 8, 2
+    builder = instance_builder_for(model, J, I, seed=0)
+    tm = TESTBED_MODELS[model]
+    fixed = builder([tm.default_cut] * J)
+    base = solve_balanced_greedy(fixed).makespan
+    res = search_cuts(builder, tm.num_layers, J, init_cut=tm.default_cut,
+                      rounds=1, stride=4)
+    check_feasible(res.instance, res.schedule)
+    assert res.makespan <= base
+    assert len(res.cuts) == J
+    # monotone improvement across rounds
+    mks = [h["makespan"] for h in res.history]
+    assert mks == sorted(mks, reverse=True)
+
+
+def test_pipelining_beats_sequential():
+    inst = cnn_instance("vgg19", J=10, I=3, scenario=2, seed=1)
+    assign = assign_balanced(inst)
+    res = schedule_pipelined(inst, assign, K=4)
+    assert res.makespan < res.sequential_makespan
+    assert res.gain_pct > 10.0
+    # batch completions are ordered
+    pb = res.per_batch_completion
+    assert pb == sorted(pb)
+
+
+def test_pipelining_k1_consistency():
+    inst = cnn_instance("resnet101", J=6, I=2, scenario=1, seed=2)
+    assign = assign_balanced(inst)
+    res = schedule_pipelined(inst, assign, K=1)
+    assert res.makespan == res.sequential_makespan
+    assert res.gain_pct == 0.0
+    # list scheduler never beats the per-client critical path
+    i0 = int(assign[0])
+    path = int(inst.r[i0, 0] + inst.p[i0, 0] + inst.l[i0, 0]
+               + inst.lp[i0, 0] + inst.pp[i0, 0] + inst.rp[i0, 0])
+    assert res.makespan >= path

@@ -1,0 +1,130 @@
+"""Baker (1983) preemptive min-max-cost scheduler: optimality + invariants."""
+
+import numpy as np
+import pytest
+from scipy import sparse
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from repro.core import baker
+
+
+def _exact_single_machine(jobs, horizon, free=lambda t: True):
+    """Reference ILP: min max_j (C_j + tail_j), preemptive, release dates."""
+    n = len(jobs)
+    T = horizon
+    # vars: s[j, t] in {0,1}, phi[j], xi
+    nvar = n * T + n + 1
+    sidx = lambda j, t: j * T + t
+    phi0 = n * T
+    xi = n * T + n
+    lb = np.zeros(nvar)
+    ub = np.ones(nvar)
+    ub[phi0:phi0 + n] = T
+    ub[xi] = 2 * T
+    integrality = np.concatenate([np.ones(n * T), np.zeros(n + 1)])
+    c = np.zeros(nvar)
+    c[xi] = 1.0
+    rows, lo, hi = [], [], []
+
+    def add(coefs, a, b):
+        rows.append(coefs)
+        lo.append(a)
+        hi.append(b)
+
+    for j, jb in enumerate(jobs):
+        add({sidx(j, t): 1.0 for t in range(T)}, jb.proc, jb.proc)
+        for t in range(min(jb.release, T)):
+            ub[sidx(j, t)] = 0.0
+        for t in range(T):
+            if not free(t):
+                ub[sidx(j, t)] = 0.0
+            add({phi0 + j: 1.0, sidx(j, t): -(t + 1)}, 0.0, np.inf)
+        add({xi: 1.0, phi0 + j: -1.0}, jb.tail, np.inf)
+    for t in range(T):
+        add({sidx(j, t): 1.0 for j in range(n)}, -np.inf, 1.0)
+
+    data, ri, ci = [], [], []
+    for rn, coefs in enumerate(rows):
+        for k, v in coefs.items():
+            ri.append(rn); ci.append(k); data.append(v)
+    A = sparse.csr_matrix((data, (ri, ci)), shape=(len(rows), nvar))
+    res = milp(c=c, constraints=LinearConstraint(A, np.array(lo), np.array(hi)),
+               bounds=Bounds(lb, ub), integrality=integrality)
+    assert res.x is not None, res.message
+    return float(res.fun)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_baker_matches_exact_ilp(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    jobs = [
+        baker.Job(job_id=j, release=int(rng.integers(0, 6)),
+                  proc=int(rng.integers(1, 5)), tail=int(rng.integers(0, 6)))
+        for j in range(n)
+    ]
+    horizon = sum(j.proc for j in jobs) + max(j.release for j in jobs) + 1
+    sol = baker.solve_min_max_cost(jobs, lambda t: True, horizon)
+    got = baker.max_cost(jobs, sol)
+    want = _exact_single_machine(jobs, horizon)
+    assert got == pytest.approx(want), f"baker {got} != exact {want}"
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_baker_with_forbidden_slots_matches_exact(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(2, 5))
+    jobs = [
+        baker.Job(job_id=j, release=int(rng.integers(0, 4)),
+                  proc=int(rng.integers(1, 4)), tail=int(rng.integers(0, 4)))
+        for j in range(n)
+    ]
+    forbidden = set(int(t) for t in rng.choice(20, size=6, replace=False))
+    free = lambda t: t not in forbidden
+    horizon = 64
+    sol = baker.solve_min_max_cost(jobs, free, horizon)
+    # validity: no forbidden slots, no double-booking, releases respected
+    seen = set()
+    for jb in jobs:
+        s = sol[jb.job_id]
+        assert len(s) == jb.proc
+        assert s[0] >= jb.release
+        for t in s:
+            assert free(int(t))
+            assert int(t) not in seen
+            seen.add(int(t))
+    got = baker.max_cost(jobs, sol)
+    want = _exact_single_machine(jobs, horizon, free)
+    assert got == pytest.approx(want)
+
+
+def test_baker_beats_or_ties_fcfs():
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        n = int(rng.integers(2, 7))
+        jobs = [
+            baker.Job(job_id=j, release=int(rng.integers(0, 8)),
+                      proc=int(rng.integers(1, 6)), tail=int(rng.integers(0, 8)))
+            for j in range(n)
+        ]
+        horizon = sum(j.proc for j in jobs) + max(j.release for j in jobs) + 1
+        pre = baker.solve_min_max_cost(jobs, lambda t: True, horizon)
+        fcfs = baker.fcfs_nonpreemptive(jobs, lambda t: True, horizon)
+        assert baker.max_cost(jobs, pre) <= baker.max_cost(jobs, fcfs)
+
+
+def test_paper_worked_example_structure():
+    """Fig. 4 family: one helper, 5 clients; checks block handling + optimality
+    against the exact ILP on a structurally similar instance."""
+    jobs = [
+        baker.Job(job_id=1, release=0, proc=2, tail=5),
+        baker.Job(job_id=4, release=1, proc=3, tail=1),
+        baker.Job(job_id=2, release=3, proc=2, tail=3),
+        baker.Job(job_id=3, release=6, proc=1, tail=8),
+        baker.Job(job_id=5, release=9, proc=1, tail=2),
+    ]
+    horizon = 24
+    sol = baker.solve_min_max_cost(jobs, lambda t: True, horizon)
+    got = baker.max_cost(jobs, sol)
+    want = _exact_single_machine(jobs, horizon)
+    assert got == pytest.approx(want, abs=1e-4)

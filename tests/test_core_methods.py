@@ -1,0 +1,109 @@
+"""System-level tests of the paper's solution methods."""
+
+import numpy as np
+import pytest
+
+from repro.core import (check_feasible, full_schedule_for_assignment,
+                        lower_bound, random_instance, solve_admm,
+                        solve_balanced_greedy, solve_baseline, solve_exact,
+                        solve_local_search, solve_strategy, queuing_delay)
+from repro.core.balanced_greedy import assign_balanced
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_all_methods_feasible_and_bounded(seed):
+    inst = random_instance(10, 3, seed=seed)
+    lb = lower_bound(inst)
+    for name, res in [
+        ("greedy", solve_balanced_greedy(inst)),
+        ("baseline", solve_baseline(inst, seed=seed)),
+        ("admm", solve_admm(inst, mode="fast", tau_max=6)),
+        ("ls", solve_local_search(inst, time_budget_s=3)),
+    ]:
+        check_feasible(inst, res.schedule)
+        assert res.makespan >= lb, f"{name}: makespan {res.makespan} < LB {lb}"
+        assert res.makespan <= inst.T, f"{name}: makespan beyond horizon"
+
+
+def test_admm_near_optimal_tiny():
+    inst = random_instance(4, 2, seed=3, p_range=(1, 4), pp_range=(1, 5),
+                           r_range=(1, 3), l_range=(1, 2), lp_range=(1, 2),
+                           rp_range=(1, 3))
+    ex = solve_exact(inst, time_limit=120)
+    assert ex.status == "optimal"
+    check_feasible(inst, ex.schedule)
+    a = solve_admm(inst, mode="fast")
+    assert a.makespan >= ex.schedule.makespan(inst)
+    # paper Table II: sub-15% gap in the worst tested case; allow slack here
+    assert a.makespan <= 1.5 * ex.schedule.makespan(inst)
+
+
+def test_exact_milp_feasible_and_optimal_objective():
+    inst = random_instance(4, 2, seed=7, p_range=(1, 4), pp_range=(1, 5),
+                           r_range=(1, 3), l_range=(1, 2), lp_range=(1, 2),
+                           rp_range=(1, 3))
+    ex = solve_exact(inst, time_limit=120)
+    assert ex.status == "optimal"
+    check_feasible(inst, ex.schedule)
+    assert ex.schedule.makespan(inst) == pytest.approx(ex.objective)
+    assert ex.objective >= lower_bound(inst)
+
+
+def test_local_search_improves_or_ties_greedy():
+    inst = random_instance(12, 4, seed=11, heterogeneity=2.0)
+    g = solve_balanced_greedy(inst)
+    ls = solve_local_search(inst, init=g.schedule.assign.copy(), time_budget_s=5)
+    assert ls.makespan <= g.makespan
+
+
+def test_strategy_picks_and_returns_feasible():
+    small = random_instance(8, 3, seed=0, heterogeneity=2.0)
+    res = solve_strategy(small)
+    check_feasible(small, res.schedule)
+    large = random_instance(70, 8, seed=0, heterogeneity=0.2)
+    res2 = solve_strategy(large, large_j=60)
+    check_feasible(large, res2.schedule)
+    assert res2.method == "balanced-greedy"
+
+
+def test_preemption_cost_extension():
+    inst = random_instance(8, 3, seed=2)
+    inst_mu = random_instance(8, 3, seed=2)
+    object.__setattr__(inst_mu, "mu", np.full(inst.I, 2.0))
+    a = solve_admm(inst, mode="fast", tau_max=5)
+    plain = a.schedule.makespan(inst)
+    with_cost = a.schedule.makespan_with_preemption_cost(inst_mu)
+    assert with_cost >= plain  # switching can only add delay
+    # zero switching cost reduces to the plain makespan
+    object.__setattr__(inst_mu, "mu", np.zeros(inst.I))
+    assert a.schedule.makespan_with_preemption_cost(inst_mu) == plain
+
+
+def test_queuing_delay_nonnegative():
+    inst = random_instance(10, 2, seed=4)
+    res = solve_balanced_greedy(inst)
+    for j in range(inst.J):
+        assert queuing_delay(inst, res.schedule, j) >= 0
+
+
+def test_slot_length_rescaling_tradeoff():
+    """Observation 2: coarser slots -> shorter horizon (fewer variables)."""
+    inst = random_instance(10, 3, seed=6, p_range=(4, 40), pp_range=(4, 56),
+                           r_range=(4, 32), l_range=(4, 24), lp_range=(4, 24),
+                           rp_range=(4, 32))
+    coarse = inst.scaled(4.0)
+    assert coarse.T < inst.T
+    fine_res = solve_admm(inst, mode="fast", tau_max=5)
+    coarse_res = solve_admm(coarse, mode="fast", tau_max=5)
+    # compare in original time units: coarse slots are 4x longer
+    assert coarse_res.makespan * 4 >= fine_res.makespan * 0.8
+
+
+def test_memory_constraints_respected():
+    inst = random_instance(12, 3, seed=9, mem_tight=1.2)
+    assign = assign_balanced(inst)
+    sched = full_schedule_for_assignment(inst, assign)
+    check_feasible(inst, sched)
+    for i in range(inst.I):
+        load = sum(inst.d[j] for j in range(inst.J) if assign[j] == i)
+        assert load <= inst.m[i] + 1e-9

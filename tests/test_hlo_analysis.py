@@ -1,0 +1,85 @@
+"""Trip-count-aware HLO analyzer: unit + closed-form integration tests."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import HloAnalyzer, analyze_text, parse_computations
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    txt = _compile_text(f, jnp.ones((64, 64)))
+    t = analyze_text(txt)
+    assert t.flops == pytest.approx(7 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_nested_scan_trip_counts():
+    def f(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+    txt = _compile_text(f, jnp.ones((32, 32)))
+    t = analyze_text(txt)
+    assert t.flops == pytest.approx(15 * 2 * 32 ** 3, rel=1e-6)
+
+
+def test_plain_chain_exact():
+    def g(a, b):
+        return (a @ b) @ b
+    txt = _compile_text(g, jnp.ones((16, 64)), jnp.ones((64, 64)))
+    t = analyze_text(txt)
+    assert t.flops == pytest.approx(2 * 16 * 64 * 64 * 2, rel=1e-6)
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    txt = _compile_text(f, jnp.ones((4, 8, 16)), jnp.ones((4, 16, 32)))
+    t = analyze_text(txt)
+    assert t.flops == pytest.approx(2 * 4 * 8 * 16 * 32, rel=1e-6)
+
+
+def test_parse_computations_headers_and_instrs():
+    txt = """
+ENTRY %main.4 (x.1: f32[8,8]) -> f32[8,8] {
+  %constant.5 = s32[] constant(0)
+  ROOT %dot.1 = f32[8,8]{1,0} dot(%x.1, %x.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps = parse_computations(txt)
+    assert "main.4" in comps
+    comp = comps["main.4"]
+    assert comp.is_entry
+    ops = {i.opcode for i in comp.instrs}
+    assert "dot" in ops and "constant" in ops
+    t = analyze_text(txt)
+    assert t.flops == 2 * 8 * 8 * 8
+
+
+def test_tuple_shape_with_index_comment():
+    """Regression: /*index=5*/ comments inside tuple shapes contain '='."""
+    txt = """
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %while.1 = (s32[], f32[4]{0}, /*index=2*/f32[4]{0}) while(%t), condition=%c, body=%b, backend_config={"known_trip_count":{"n":"9"}}
+}
+%b (arg: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %dot.2 = f32[]{} dot(%p, %p), lhs_contracting_dims={0}, rhs_contracting_dims={0}
+}
+"""
+    comps = parse_computations(txt)
+    an = HloAnalyzer(txt)
+    assert an.trip.get("b") == 9

@@ -1,0 +1,118 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the exact TPU program body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import flash_attention_op, ssd_op
+from repro.kernels.ref import flash_attention_ref, ssd_ref
+from repro.models.attention import multi_head_attention
+
+
+def _mk_qkv(key, B, Sq, Sk, H, KV, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("Sq,Sk", [(128, 128), (200, 200), (64, 256), (33, 65)])
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (4, 1)])
+def test_flash_shapes(Sq, Sk, H, KV):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(0), 2, Sq, Sk, H, KV, 64, jnp.float32)
+    out = flash_attention_op(q, k, v, causal=True, block_q=64, block_k=64)
+    qf = q.transpose(0, 2, 1, 3).reshape(2 * H, Sq, 64)
+    kf = k.transpose(0, 2, 1, 3).reshape(2 * KV, Sk, 64)
+    vf = v.transpose(0, 2, 1, 3).reshape(2 * KV, Sk, 64)
+    ref = flash_attention_ref(qf, kf, vf, causal=True)
+    ref = ref.reshape(2, H, Sq, 64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_dtypes(dtype, atol):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(1), 1, 128, 128, 4, 2, 128, dtype)
+    out = flash_attention_op(q, k, v, causal=True)
+    ref = multi_head_attention(
+        q, k, v,
+        jnp.broadcast_to(jnp.arange(128)[None], (1, 128)),
+        jnp.broadcast_to(jnp.arange(128)[None], (1, 128)),
+        causal=True, window=None, softcap=None, force_blockwise=False)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("window", [None, 32, 100])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+def test_flash_window_softcap(window, softcap):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(2), 2, 160, 160, 4, 4, 64, jnp.float32)
+    out = flash_attention_op(q, k, v, causal=True, window=window,
+                             softcap=softcap, block_q=64, block_k=64)
+    pos = jnp.broadcast_to(jnp.arange(160)[None], (2, 160))
+    ref = multi_head_attention(q, k, v, pos, pos, causal=True, window=window,
+                               softcap=softcap, force_blockwise=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_head_dim_padding():
+    """head_dim not a lane multiple (e.g. 80 for zamba2/hubert) is padded."""
+    q, k, v = _mk_qkv(jax.random.PRNGKey(3), 1, 128, 128, 4, 2, 80, jnp.float32)
+    out = flash_attention_op(q, k, v, causal=True)
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (1, 128))
+    ref = multi_head_attention(q, k, v, pos, pos, causal=True, window=None,
+                               softcap=None, force_blockwise=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (128, 64), (256, 64)])
+@pytest.mark.parametrize("H,P,N", [(2, 16, 8), (3, 32, 16)])
+def test_ssd_shapes(S, chunk, H, P, N):
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 6)
+    b = 2
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, S, N))
+    C = jax.random.normal(ks[4], (b, S, N))
+    D = jax.random.normal(ks[5], (H,))
+    out = ssd_op(x, dt, A, B, C, D, chunk=chunk)
+    ref = ssd_ref(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    """The recurrence must make the result independent of chunk size."""
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 6)
+    b, S, H, P, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, S, N))
+    C = jax.random.normal(ks[4], (b, S, N))
+    D = jax.random.normal(ks[5], (H,))
+    outs = [ssd_op(x, dt, A, B, C, D, chunk=c) for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_bf16():
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 6)
+    b, S, H, P, N = 1, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, S, H, P), jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H))).astype(jnp.bfloat16)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, S, N), jnp.bfloat16)
+    C = jax.random.normal(ks[4], (b, S, N), jnp.bfloat16)
+    D = jax.random.normal(ks[5], (H,))
+    out = ssd_op(x, dt, A, B, C, D, chunk=32)
+    ref = ssd_ref(x.astype(jnp.float32), dt.astype(jnp.float32), A,
+                  B.astype(jnp.float32), C.astype(jnp.float32), D, chunk=32)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=0.15, rtol=0.1)

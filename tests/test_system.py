@@ -1,0 +1,58 @@
+"""End-to-end behaviour tests for the full system: workflow optimization ->
+real parallel-SL execution -> aggregation, exactly as a deployment would
+run it (the examples' code path)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import check_feasible, solve_strategy
+from repro.data.synthetic import SyntheticLM
+from repro.profiling.scenarios import transformer_instance
+from repro.sl.runtime import ParallelSLTrainer
+from repro.sl.simulator import simulate
+
+
+@pytest.fixture(scope="module")
+def e2e():
+    cfg = get_config("gemma2-2b").reduced(num_layers=2, d_model=64, vocab=128)
+    inst = transformer_instance(cfg, J=4, I=2, scenario=2, seed=1,
+                                slot_s=0.05, batch=2, seq=32)
+    strat = solve_strategy(inst, refine=True, refine_budget_s=2.0)
+    check_feasible(inst, strat.schedule)
+    trainer = ParallelSLTrainer(cfg, inst, strat.schedule, lr=5e-3)
+    gen = SyntheticLM(cfg.vocab_size, 32, 2, seed=0)
+    batches = [next(gen.batches(1)) for _ in range(inst.J)]
+    stats = [trainer.run_round(batches, local_steps=2) for _ in range(5)]
+    return cfg, inst, strat, trainer, stats
+
+
+def test_optimized_workflow_trains_the_model(e2e):
+    _, _, _, _, stats = e2e
+    losses = [s.mean_loss for s in stats]
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_makespan_is_reported_and_consistent(e2e):
+    _, inst, strat, trainer, stats = e2e
+    assert stats[0].batch_makespan_slots == strat.makespan
+    rep = trainer.report()
+    assert rep.makespan == strat.makespan
+    assert simulate(inst, strat.schedule).makespan == strat.makespan
+
+
+def test_traffic_matches_cost_model(e2e):
+    """Bytes actually crossing the cuts equal the analytic cost model's
+    prediction (per batch per client: 2 legs x 2 cuts)."""
+    cfg, inst, _, _, stats = e2e
+    B, S, d = 2, 32, cfg.d_model
+    per_leg = B * S * d * 4  # f32 activations in the CPU runtime
+    expected_per_step = inst.J * 2 * (per_leg + per_leg)
+    assert stats[0].cut_traffic_bytes == expected_per_step * 2  # 2 local steps
+
+
+def test_strategy_never_worse_than_baseline(e2e):
+    from repro.core import solve_baseline
+    _, inst, strat, _, _ = e2e
+    base = min(solve_baseline(inst, seed=s).makespan for s in range(3))
+    assert strat.makespan <= base
